@@ -1,0 +1,140 @@
+"""Shared benchmark plumbing: one trained dit-small reused by every
+paper-table benchmark, image metrics (PSNR/SSIM), policy sweep runner."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as config_lib
+from repro.checkpointing import checkpoint
+from repro.core.cache import CachePolicy
+from repro.diffusion import sampler, schedule
+from repro.launch.train import train_dit
+from repro.models import common as mcommon
+from repro.models import dit
+
+CKPT_DIR = "results/bench_ckpt"
+IMG_SIZE = 32
+TRAIN_STEPS = int(os.environ.get("BENCH_TRAIN_STEPS", "200"))
+N_STEPS = int(os.environ.get("BENCH_SAMPLE_STEPS", "50"))
+BATCH = int(os.environ.get("BENCH_BATCH", "4"))
+
+
+def get_model():
+    """Train (once) and cache the small DiT used by the quality benches."""
+    cfg = config_lib.get_config("dit-small")
+    specs = dit.dit_specs(cfg)
+    like = mcommon.init_params(specs, jax.random.key(0),
+                               jnp.dtype(cfg.dtype))
+    step = checkpoint.latest_step(CKPT_DIR, "dit")
+    if step >= 0:
+        params = checkpoint.restore(CKPT_DIR, step, like, name="dit")
+    else:
+        params = train_dit(cfg, TRAIN_STEPS, 16, ckpt_dir=CKPT_DIR,
+                           size=IMG_SIZE)
+    return cfg, params
+
+
+def make_fns(cfg, params):
+    def full_fn(x, t):
+        tb = jnp.full((x.shape[0],), t)
+        out = dit.dit_forward(params, x, tb, cfg)
+        return out.velocity, out.crf
+
+    def from_crf_fn(crf, t):
+        tb = jnp.full((crf.shape[0],), t)
+        return dit.dit_from_crf(params, crf, tb, cfg, IMG_SIZE, IMG_SIZE)
+
+    return full_fn, from_crf_fn
+
+
+def denoiser_flops_per_step(cfg) -> float:
+    """Analytic FLOPs of one denoiser forward (batch 1)."""
+    s = (IMG_SIZE // cfg.patch_size) ** 2
+    per_layer = (4 * cfg.d_model ** 2 + 2 * cfg.d_model * cfg.d_ff
+                 ) * 2 * s + 2 * 2 * s * s * cfg.d_model
+    return (cfg.n_layers + 2 * cfg.n_double) * per_layer
+
+
+def psnr(a, b, data_range: float = 2.0) -> float:
+    mse = float(jnp.mean(jnp.square(a.astype(jnp.float32)
+                                    - b.astype(jnp.float32))))
+    if mse == 0:
+        return float("inf")
+    return float(10.0 * np.log10(data_range ** 2 / mse))
+
+
+def ssim(a, b, data_range: float = 2.0) -> float:
+    """Global-statistics SSIM per channel (adequate at 32x32 bench scale)."""
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    c1, c2 = (0.01 * data_range) ** 2, (0.03 * data_range) ** 2
+    mu_a, mu_b = a.mean(), b.mean()
+    va, vb = a.var(), b.var()
+    cov = ((a - mu_a) * (b - mu_b)).mean()
+    return float(((2 * mu_a * mu_b + c1) * (2 * cov + c2))
+                 / ((mu_a ** 2 + mu_b ** 2 + c1) * (va + vb + c2)))
+
+
+def run_policy(cfg, full_fn, from_crf_fn, policy: CachePolicy,
+               x0: jnp.ndarray, n_steps: int = N_STEPS,
+               time_it: bool = True) -> Dict:
+    ts = schedule.timesteps(n_steps)
+    n_tok = (IMG_SIZE // cfg.patch_size) ** 2
+    crf_shape = (x0.shape[0], n_tok, cfg.d_model)
+
+    fn = jax.jit(lambda x: sampler.sample(full_fn, from_crf_fn, x, ts,
+                                          policy, crf_shape=crf_shape))
+    res = fn(x0)
+    res.x.block_until_ready()
+    wall = None
+    if time_it:
+        t0 = time.perf_counter()
+        res = fn(x0)
+        res.x.block_until_ready()
+        wall = time.perf_counter() - t0
+    n_full = int(res.n_full)
+    flops = n_full * denoiser_flops_per_step(cfg) * x0.shape[0]
+    return {"x": res.x, "n_full": n_full, "wall_s": wall,
+            "flops": flops,
+            "flops_speedup": n_steps / max(n_full, 1)}
+
+
+def quality_row(name: str, res: Dict, ref_x, base_wall: float,
+                base_flops: float) -> Dict:
+    wall = res["wall_s"] or 0.0
+    return {
+        "method": name,
+        "latency_s": round(wall, 3),
+        "speed": round(base_wall / wall, 2) if wall else 0.0,
+        "flops_speedup": round(base_flops / max(res["flops"], 1), 2),
+        "n_full": res["n_full"],
+        "psnr": round(psnr(res["x"], ref_x), 2),
+        "ssim": round(ssim(res["x"], ref_x), 3),
+        "rel_err": round(float(
+            jnp.linalg.norm((res["x"] - ref_x).astype(jnp.float32))
+            / jnp.linalg.norm(ref_x.astype(jnp.float32))), 4),
+    }
+
+
+def print_table(title: str, rows: List[Dict]):
+    if not rows:
+        return
+    cols = list(rows[0].keys())
+    print(f"\n### {title}")
+    print(" | ".join(cols))
+    print(" | ".join(["---"] * len(cols)))
+    for r in rows:
+        print(" | ".join(str(r[c]) for c in cols))
+
+
+def save_rows(path: str, rows: List[Dict]):
+    import json
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)

@@ -1,0 +1,57 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from
+results/dryrun/*.json and results/bench/*.json.
+
+  PYTHONPATH=src python -m benchmarks.experiments_md > EXPERIMENTS_tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import roofline as rl
+
+
+def _fmt_bytes(b):
+    return f"{b / 1e9:.2f}"
+
+
+def dryrun_section(dryrun_dir="results/dryrun"):
+    print("\n## §Dry-run (generated)\n")
+    print("Per-device numbers from `compiled.memory_analysis()` and the "
+          "trip-count-aware HLO analyzer; `coll_gb` = per-device "
+          "collective bytes per step.\n")
+    hdr = ("arch | shape | mesh | compile_s | args_gb/dev | temp_gb/dev | "
+           "hlo_flops/dev | hlo_gb/dev | coll_gb/dev | top collective")
+    print(hdr)
+    print(" | ".join(["---"] * len(hdr.split(" | "))))
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        r = json.load(open(path))
+        c = r["collectives"]
+        kinds = {k: v for k, v in c.items()
+                 if k not in ("total_bytes", "op_counts")}
+        top = max(kinds, key=kinds.get) if kinds else "-"
+        print(" | ".join([
+            r["arch"], r["shape"], r["mesh"], str(r["compile_s"]),
+            _fmt_bytes(r["memory"].get("argument_size_bytes", 0)),
+            _fmt_bytes(r["memory"].get("temp_size_bytes", 0)),
+            f"{r['flops']:.3e}",
+            _fmt_bytes(r["bytes_accessed"]),
+            _fmt_bytes(c.get("total_bytes", 0.0)),
+            top,
+        ]))
+
+
+def roofline_section():
+    print("\n## §Roofline (generated)\n")
+    rows = rl.run(out="results/bench/roofline.json")
+    # printed by rl.run already in markdown form
+
+
+def main():
+    dryrun_section()
+    rows = rl.run(out="results/bench/roofline.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh) from the
+dry-run JSONs (results/dryrun/*.json; produce them with
+``python -m repro.launch.dryrun --all [--multi-pod]``).
+
+Per combo: compute/memory/collective terms in seconds (v5e constants),
+the dominant bottleneck, MODEL_FLOPS = 6·N_active·D (train) or
+2·N_active·D (inference), and the MODEL/HLO flops ratio (compiled-compute
+usefulness — catches remat & dispatch waste).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict
+
+import numpy as np
+
+import repro.configs as config_lib
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec
+from repro.roofline import analysis
+from benchmarks import common as B
+
+
+def _numel(spec_tree) -> int:
+    import jax
+    leaves = jax.tree.leaves(spec_tree,
+                             is_leaf=lambda x: isinstance(x, ParamSpec))
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+def active_params(cfg: ModelConfig) -> float:
+    """Parameter count with only top_k of n_experts active."""
+    from repro.launch import steps as steps_lib
+    specs = steps_lib.model_specs(cfg)
+    total = _numel(specs)
+    if cfg.moe is None or cfg.moe.n_experts == 0:
+        return float(total)
+    import jax
+    expert_numel = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, ParamSpec))[0]:
+        keys = [str(getattr(p, "key", "")) for p in path]
+        if any(k in ("wi_gate", "wi_up", "wo") for k in keys) and \
+                leaf.axes[0] == "layer" and "expert" in leaf.axes:
+            expert_numel += int(np.prod(leaf.shape))
+    frac = cfg.moe.top_k / cfg.moe.n_experts
+    return float(total - expert_numel * (1.0 - frac))
+
+
+def model_flops_for(arch: str, shape: str) -> float:
+    if shape in ("denoise_step", "cached_step"):
+        from repro.models import dit as dit_mod
+        cfg = config_lib.get_config(arch)
+        if shape == "cached_step":
+            # cached step has no model matmuls beyond the final layer
+            pdim = cfg.patch_size ** 2 * cfg.in_channels
+            return 2.0 * cfg.d_model * pdim * 64 * 4096
+        n = _numel(dit_mod.dit_specs(cfg))
+        return 2.0 * n * 64 * 4096
+    cfg = config_lib.for_shape(config_lib.get_config(arch), shape)
+    info = config_lib.INPUT_SHAPES[shape]
+    n_act = active_params(cfg)
+    if info["kind"] == "train":
+        tokens = info["global_batch"] * info["seq_len"]
+        return 6.0 * n_act * tokens
+    if info["kind"] == "prefill":
+        tokens = info["global_batch"] * info["seq_len"]
+        return 2.0 * n_act * tokens
+    tokens = info["global_batch"]  # decode: one token per request
+    return 2.0 * n_act * tokens
+
+
+def run(dryrun_dir: str = "results/dryrun",
+        out: str = "results/bench/roofline.json"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        n = rec["n_devices"]
+        # per-device HLO flops/bytes from the analyzer x n_devices = global
+        flops_g = rec["flops"] * n
+        bytes_g = rec["bytes_accessed"] * n
+        coll_g = rec["collectives"]["total_bytes"] * n
+        terms = analysis.roofline_terms(flops_g, bytes_g, coll_g, n)
+        mf = model_flops_for(rec["arch"], rec["shape"])
+        hbm_gb = (rec["memory"].get("argument_size_bytes", 0)
+                  + rec["memory"].get("temp_size_bytes", 0)
+                  + rec["memory"].get("output_size_bytes", 0)
+                  - rec["memory"].get("alias_size_bytes", 0)) / 1e9
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "compute_ms": round(terms["compute_s"] * 1e3, 3),
+            "memory_ms": round(terms["memory_s"] * 1e3, 3),
+            "collective_ms": round(terms["collective_s"] * 1e3, 3),
+            "bottleneck": terms["bottleneck"].replace("_s", ""),
+            "model_flops": f"{mf:.3e}",
+            "model/hlo": round(mf / max(flops_g, 1.0), 3),
+            "hbm_gb_per_dev": round(hbm_gb, 2),
+        })
+    rows.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    B.print_table("Roofline terms per (arch x shape x mesh)", rows)
+    B.save_rows(out, rows)
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

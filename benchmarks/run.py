@@ -1,0 +1,53 @@
+"""Run every paper-table benchmark. One function per paper table/figure.
+
+Prints markdown tables + a final ``name,us_per_call,derived`` CSV line
+per benchmark (latency of the headline FreqCa config; derived = its
+quality metric).
+"""
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig2_freq_analysis, fig4_crf_mse, figc1_ablation,
+                            roofline, table1_flux, table2_qwen,
+                            table3_kontext, table4_qwen_edit, table5_memory)
+    csv = ["name,us_per_call,derived"]
+
+    def headline(rows, pick="freqca(N=5)", metric="psnr"):
+        for r in rows:
+            if r.get("method") == pick:
+                lat = r.get("latency_s", 0.0) or 0.0
+                return f"{lat * 1e6:.0f}", f"{metric}={r[metric]}"
+        return "0", ""
+
+    t1 = table1_flux.run()
+    csv.append("table1_flux,%s,%s" % headline(t1))
+    t2 = table2_qwen.main() or []
+    t3 = table3_kontext.run()
+    csv.append("table3_kontext,%s,%s" % headline(t3))
+    table4_qwen_edit.main()
+    t5 = table5_memory.run()
+    csv.append("table5_memory,0,freqca_pct=%s"
+               % t5[-1]["pct_of_layerwise"])
+    f2 = fig2_freq_analysis.run()
+    csv.append("fig2_freq_analysis,0,rows=%d" % len(f2))
+    f4 = fig4_crf_mse.run()
+    csv.append("fig4_crf_mse,0,crf_over_layerwise=%s"
+               % f4[-1]["rel_mse_mean"])
+    fc1 = figc1_ablation.run()
+    csv.append("figc1_ablation,0,rows=%d" % len(fc1))
+    try:
+        rl = roofline.run()
+        csv.append("roofline,0,combos=%d" % len(rl))
+    except Exception as e:  # dryrun results may not exist yet
+        csv.append("roofline,0,skipped(%s)" % type(e).__name__)
+
+    print("\n=== CSV ===")
+    for line in csv:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Paper Table 2 (Qwen-Image grid) at CPU scale — FFT decomposition
+(the paper's Qwen setting; appendix B.3)."""
+from benchmarks import table1_flux
+
+
+def main():
+    table1_flux.run(method="fft",
+                    title="Table 2 — Qwen-Image-like (FFT)",
+                    out="results/bench/table2.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Paper Table 4 (Qwen-Image-Edit) at CPU scale — editing grid with FFT
+decomposition (the paper's Qwen-Edit setting)."""
+from benchmarks import table3_kontext
+
+
+def main():
+    table3_kontext.run(method="fft",
+                       title="Table 4 — Qwen-Image-Edit-like (FFT)",
+                       out="results/bench/table4.json")
+
+
+if __name__ == "__main__":
+    main()

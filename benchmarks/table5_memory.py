@@ -1,0 +1,67 @@
+"""Paper Table 5: cache memory / latency comparison.
+
+Measures actual cache-state bytes (pytree) per policy for the paper's
+FLUX geometry (L=57 blocks, 4096 image tokens, d=3072) and for the bench
+DiT, plus the paper's closed-form K_layer = 2(m+1)L vs K_FreqCa = 4.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common as B
+from repro.core import cache as cache_lib
+from repro.core.cache import CachePolicy
+
+
+def cache_units(policy: CachePolicy, n_layers: int) -> int:
+    if policy.kind == "layerwise":
+        return 2 * policy.k_high * n_layers
+    return policy.cache_units
+
+
+def run(out: str = "results/bench/table5.json"):
+    # FLUX.1-dev geometry: L=57, 4096 img tokens (1024px/16/patch2), d=3072
+    feat = (1, 4096, 3072)
+    n_layers = 57
+    rows = []
+    for name, pol, layerwise in [
+        ("layer-wise (ToCa/TaylorSeer-style)",
+         CachePolicy(kind="taylorseer", high_order=2), True),
+        ("TaylorSeer CRF", CachePolicy(kind="taylorseer", high_order=2),
+         False),
+        ("FORA CRF", CachePolicy(kind="fora"), False),
+        ("FreqCa (ours)", CachePolicy(kind="freqca", high_order=2), False),
+    ]:
+        if layerwise:
+            state = cache_lib.layerwise_init(pol, 2 * n_layers, feat,
+                                             dtype=jnp.bfloat16)
+            nbytes = sum(x.size * x.dtype.itemsize
+                         for x in jax.tree.leaves(state))
+            units = 2 * pol.k_high * n_layers
+        else:
+            state = cache_lib.init_state(pol, feat, dtype=jnp.bfloat16)
+            nbytes = cache_lib.cache_bytes(state)
+            units = pol.cache_units
+        rows.append({
+            "method": name,
+            "cache_units": units,
+            "cache_gb": round(nbytes / 1e9, 4),
+            "pct_of_layerwise": round(
+                100 * units / (2 * 3 * n_layers), 2),
+        })
+    B.print_table("Table 5 — cache memory (FLUX geometry, L=57, bf16)",
+                  rows)
+    # paper's claim: FreqCa ~1.17% of layer-wise
+    freqca = [r for r in rows if "FreqCa" in r["method"]][0]
+    assert freqca["pct_of_layerwise"] < 2.0, freqca
+    B.save_rows(out, rows)
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Reproduce the paper's Fig-2 frequency analysis on the bench DiT:
+low band = similar but jumpy; high band = less similar but continuous.
+
+  PYTHONPATH=src python examples/freq_analysis.py
+"""
+from benchmarks import fig2_freq_analysis
+
+if __name__ == "__main__":
+    fig2_freq_analysis.run()

@@ -1,0 +1,27 @@
+"""Assigned-architecture tour: run a reduced variant of every assigned
+architecture through one train step and a short greedy decode.
+
+  PYTHONPATH=src python examples/lm_backbones.py
+"""
+import jax
+
+import repro.configs as config_lib
+from repro.launch.train import train_lm
+from repro.models import common, transformer
+from repro.serving.engine import LMEngine
+
+for arch in config_lib.ASSIGNED:
+    cfg = config_lib.reduced(config_lib.get_config(arch))
+    print(f"== {arch} ({cfg.family}) ==")
+    if cfg.is_encdec:
+        _, losses = train_lm(cfg, steps=3, batch=2, seq=32, ckpt_dir="")
+        print(f"  3 train steps, loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+        continue
+    params, losses = train_lm(cfg, steps=3, batch=2, seq=32, ckpt_dir="")
+    print(f"  3 train steps, loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    if cfg.n_prefix_tokens == 0:
+        eng = LMEngine(params, cfg, max_len=16)
+        prompt = jax.random.randint(jax.random.key(0), (1, 4), 0,
+                                    cfg.vocab_size)
+        out = eng.generate(prompt, n_new=6)
+        print(f"  decode: {out[0].tolist()}")

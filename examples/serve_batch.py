@@ -1,0 +1,13 @@
+"""End-to-end serving driver (the paper's deployment shape): batched
+generation requests through the FreqCa DiffusionEngine, with latency,
+speedup, and fidelity report.
+
+  PYTHONPATH=src python examples/serve_batch.py
+"""
+from repro.launch import serve
+
+if __name__ == "__main__":
+    import sys
+    sys.argv = [sys.argv[0], "--requests", "8", "--interval", "5",
+                "--steps", "50", "--train-steps", "120"]
+    serve.main()

@@ -1,0 +1,66 @@
+"""Pytree checkpointing: flat npz payload + json tree metadata.
+
+No orbax offline; this covers save/restore for params, optimizer state
+and data-iterator step with atomic rename semantics.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(directory: str, step: int, tree, name: str = "state") -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    meta = {"step": step,
+            "keys": {k: {"dtype": str(v.dtype), "shape": list(v.shape)}
+                     for k, v in arrays.items()}}
+    path = os.path.join(directory, f"{name}_{step:08d}")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp.npz")
+    os.close(fd)
+    np.savez(tmp, **arrays)
+    os.replace(tmp, path + ".npz")
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def latest_step(directory: str, name: str = "state") -> int:
+    if not os.path.isdir(directory):
+        return -1
+    steps = [int(f[len(name) + 1:-5]) for f in os.listdir(directory)
+             if f.startswith(name + "_") and f.endswith(".json")]
+    return max(steps) if steps else -1
+
+
+def restore(directory: str, step: int, like_tree, name: str = "state"):
+    """Restore into the structure of ``like_tree``."""
+    path = os.path.join(directory, f"{name}_{step:08d}.npz")
+    data = np.load(path)
+    flat_like = _flatten_with_paths(like_tree)
+    restored = {}
+    for k, like in flat_like.items():
+        arr = jnp.asarray(data[k])
+        assert arr.shape == tuple(np.shape(like)), (k, arr.shape)
+        restored[k] = arr.astype(like.dtype if hasattr(like, "dtype")
+                                 else arr.dtype)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like_tree)
+    keys = list(_flatten_with_paths(like_tree).keys())
+    return jax.tree_util.tree_unflatten(
+        treedef, [restored[k] for k in keys])

@@ -1,0 +1,207 @@
+"""Feature-cache state machines: FreqCa and the baselines it unifies.
+
+All policies share one jit-friendly interface so the diffusion sampler
+can swap them statically:
+
+* ``init_state(policy, feat_shape, dtype)`` -> pytree of static shapes
+* ``should_activate(policy, state, step_idx)`` -> bool scalar (traced)
+* ``update(policy, state, z, t)``  — ran on *activated* (full-compute)
+  steps; pushes the fresh CRF into the history ring.
+* ``predict(policy, state, t)``    — ran on cached steps; returns ẑ_t.
+
+Policies (``kind``):
+  freqca      — paper: low band reused (order ``low_order``, default 0),
+                high band Hermite-predicted (order ``high_order``, default
+                2), bands split by ``method`` (fft | dct) at fraction
+                ``rho``.  Cache = (low_order+1) + (high_order+1) feature
+                tensors — O(1) in depth (CRF caching).
+  taylorseer  — whole-feature polynomial forecast of order ``high_order``
+                (no decomposition) == the paper's main forecast baseline.
+  fora        — whole-feature reuse (order 0) == the paper's main reuse
+                baseline.
+  teacache    — TeaCache-style ADAPTIVE reuse: the sampler accumulates
+                the relative change of the model input x_t between
+                steps and triggers a full forward when it crosses
+                ``tea_threshold`` (the interval schedule is ignored);
+                prediction = reuse, like FORA.
+  freqca_a    — beyond-paper ADAPTIVE FreqCa: at every activated step
+                the cache state already contains what FreqCa *would
+                have predicted* for that step — its relative error
+                against the freshly computed CRF is free to measure.
+                The sampler then budgets cached steps from it:
+                skip while (steps_since_full+1) · err_last <
+                ``tea_threshold``; bands/predictors identical to
+                freqca.  Unifies TeaCache's adaptivity with FreqCa's
+                frequency-split predictor.
+  none        — never cache (ground truth / baseline latency).
+
+``should_activate`` implements the paper's schedule: a full forward every
+``interval`` steps, plus a warm-up of full steps until the history is
+populated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import frequency, hermite
+
+
+@dataclasses.dataclass(frozen=True)
+class CachePolicy:
+    kind: str = "freqca"          # freqca | taylorseer | fora | none
+    interval: int = 5             # N: full forward every N steps
+    method: str = "dct"           # fft | dct | none (frequency transform)
+    rho: float = 0.0625           # low-frequency fraction of the spectrum
+    low_order: int = 0            # 0 = direct reuse (paper default)
+    high_order: int = 2           # Hermite order for the high band
+    token_axis: int = 1           # axis of [B, S, D] to transform over
+    tea_threshold: float = 0.15   # teacache / freqca_a error budget
+
+    @property
+    def k_low(self) -> int:
+        return self.low_order + 1
+
+    @property
+    def k_high(self) -> int:
+        return self.high_order + 1
+
+    @property
+    def cache_units(self) -> int:
+        """Number of feature-sized tensors held (paper §4.4.1)."""
+        if self.kind == "none":
+            return 0
+        if self.kind in ("fora", "teacache"):
+            return 1
+        if self.kind == "taylorseer":
+            return self.k_high
+        return self.k_low + self.k_high   # freqca / freqca_a
+
+
+class CacheState(NamedTuple):
+    low_hist: jnp.ndarray     # [K_low,  *feat] spatial-domain low band
+    high_hist: jnp.ndarray    # [K_high, *feat] spatial-domain high band
+    ts_low: jnp.ndarray       # [K_low]
+    ts_high: jnp.ndarray      # [K_high]
+    n_valid: jnp.ndarray      # [] int32 — activated steps seen so far
+
+
+def init_state(policy: CachePolicy, feat_shape: Tuple[int, ...],
+               dtype=jnp.float32) -> CacheState:
+    kl, kh = policy.k_low, policy.k_high
+    if policy.kind in ("fora", "teacache"):
+        kl, kh = 1, 1
+    if policy.kind in ("taylorseer", "none"):
+        kl = 1  # unused slot kept tiny-but-static
+    return CacheState(
+        low_hist=jnp.zeros((kl,) + tuple(feat_shape), dtype),
+        high_hist=jnp.zeros((kh,) + tuple(feat_shape), dtype),
+        ts_low=jnp.full((kl,), -1.0, jnp.float32),
+        ts_high=jnp.full((kh,), -1.0, jnp.float32),
+        n_valid=jnp.zeros((), jnp.int32),
+    )
+
+
+def _needed_history(policy: CachePolicy) -> int:
+    if policy.kind in ("fora", "teacache"):
+        return 1
+    if policy.kind == "taylorseer":
+        return policy.k_high
+    if policy.kind in ("freqca", "freqca_a"):
+        return max(policy.k_low, policy.k_high)
+    return 1
+
+
+def should_activate(policy: CachePolicy, state: CacheState,
+                    step_idx: jnp.ndarray) -> jnp.ndarray:
+    if policy.kind == "none":
+        return jnp.asarray(True)
+    scheduled = (step_idx % policy.interval) == 0
+    warmup = state.n_valid < _needed_history(policy)
+    return scheduled | warmup
+
+
+def _push(hist, ts, value, t):
+    hist = jnp.roll(hist, -1, axis=0).at[-1].set(value.astype(hist.dtype))
+    ts = jnp.roll(ts, -1).at[-1].set(jnp.asarray(t, jnp.float32))
+    return hist, ts
+
+
+def update(policy: CachePolicy, state: CacheState, z: jnp.ndarray,
+           t) -> CacheState:
+    """Push the freshly computed CRF ``z`` (activated step at time t)."""
+    if policy.kind == "none":
+        return state
+    if policy.kind in ("fora", "taylorseer", "teacache"):
+        low, high = jnp.zeros_like(z), z
+    else:  # freqca / freqca_a
+        bands = frequency.decompose(z, policy.rho, policy.method,
+                                    axis=policy.token_axis)
+        low, high = bands.low, bands.high
+    low_hist, ts_low = _push(state.low_hist, state.ts_low, low, t)
+    high_hist, ts_high = _push(state.high_hist, state.ts_high, high, t)
+    return CacheState(low_hist=low_hist, high_hist=high_hist,
+                      ts_low=ts_low, ts_high=ts_high,
+                      n_valid=state.n_valid + 1)
+
+
+def predict(policy: CachePolicy, state: CacheState, t) -> jnp.ndarray:
+    """Reconstruct ẑ_t from the cache (cached step at time t)."""
+    if policy.kind in ("fora", "teacache"):
+        return state.high_hist[-1]
+    if policy.kind == "taylorseer":
+        return hermite.predict(state.ts_high, state.high_hist, t,
+                               policy.high_order)
+    assert policy.kind in ("freqca", "freqca_a"), policy.kind
+    if policy.low_order == 0:
+        low = state.low_hist[-1]
+    else:
+        low = hermite.predict(state.ts_low, state.low_hist, t,
+                              policy.low_order)
+    if policy.high_order == 0:
+        high = state.high_hist[-1]
+    else:
+        high = hermite.predict(state.ts_high, state.high_hist, t,
+                               policy.high_order)
+    return low + high
+
+
+def cache_bytes(state: CacheState) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(state))
+
+
+# ---------------------------------------------------------------------------
+# layer-wise variant (paper Fig. 4 / Table 5 ablation)
+# ---------------------------------------------------------------------------
+
+class LayerwiseState(NamedTuple):
+    """Caches every layer's residual delta — the O(L) baseline."""
+    hist: jnp.ndarray        # [K, L, *feat]
+    ts: jnp.ndarray          # [K]
+    n_valid: jnp.ndarray
+
+
+def layerwise_init(policy: CachePolicy, n_layers: int,
+                   feat_shape: Tuple[int, ...], dtype=jnp.float32):
+    k = policy.k_high
+    return LayerwiseState(
+        hist=jnp.zeros((k, n_layers) + tuple(feat_shape), dtype),
+        ts=jnp.full((k,), -1.0, jnp.float32),
+        n_valid=jnp.zeros((), jnp.int32),
+    )
+
+
+def layerwise_update(policy: CachePolicy, state: LayerwiseState,
+                     residuals: jnp.ndarray, t) -> LayerwiseState:
+    hist, ts = _push(state.hist, state.ts, residuals, t)
+    return LayerwiseState(hist=hist, ts=ts, n_valid=state.n_valid + 1)
+
+
+def layerwise_predict(policy: CachePolicy, state: LayerwiseState, t,
+                      h0: jnp.ndarray) -> jnp.ndarray:
+    """Predict each layer residual, reconstruct CRF = h0 + sum_l F̂^l."""
+    res = hermite.predict(state.ts, state.hist, t, policy.high_order)
+    return h0 + jnp.sum(res, axis=0)

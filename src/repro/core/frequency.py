@@ -1,0 +1,118 @@
+"""Frequency decomposition of cached features (paper §3.2, eq. 1).
+
+``z = z_low + z_high`` where the bands come from a generic transform
+``D`` — FFT or DCT-II along the *token* axis — and complementary
+projection operators P_low / P_high (an ideal low-pass mask keeping a
+fraction ``rho`` of the spectrum).  Both transforms are orthogonal (up to
+our normalisation), so the split is exactly a partition:
+``decompose`` then summing the bands reconstructs the input to float
+round-off (property-tested).
+
+TPU note (DESIGN.md §3): DCT-II is implemented as a dense basis matmul —
+MXU-native — with a Pallas kernel in ``repro.kernels.dct``; this module
+is the pure-jnp reference path used everywhere correctness matters.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Literal, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Method = Literal["fft", "dct", "none"]
+
+
+class Bands(NamedTuple):
+    low: jnp.ndarray
+    high: jnp.ndarray
+
+
+@functools.lru_cache(maxsize=16)
+def _dct_basis_np(n: int) -> np.ndarray:
+    """Orthonormal DCT-II basis C with C @ C.T = I; rows = frequencies."""
+    k = np.arange(n)[:, None].astype(np.float64)
+    i = np.arange(n)[None, :].astype(np.float64)
+    basis = np.cos(np.pi * (2 * i + 1) * k / (2 * n)) * math.sqrt(2.0 / n)
+    basis[0] *= 1.0 / math.sqrt(2.0)
+    return basis
+
+
+def dct_basis(n: int, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.asarray(_dct_basis_np(n), dtype)
+
+
+def dct(x: jnp.ndarray, axis: int = -2) -> jnp.ndarray:
+    """Orthonormal DCT-II along ``axis``."""
+    n = x.shape[axis]
+    c = dct_basis(n, jnp.float32)
+    xm = jnp.moveaxis(x, axis, -1).astype(jnp.float32)
+    return jnp.moveaxis(xm @ c.T, -1, axis).astype(x.dtype)
+
+
+def idct(x: jnp.ndarray, axis: int = -2) -> jnp.ndarray:
+    n = x.shape[axis]
+    c = dct_basis(n, jnp.float32)
+    xm = jnp.moveaxis(x, axis, -1).astype(jnp.float32)
+    return jnp.moveaxis(xm @ c, -1, axis).astype(x.dtype)
+
+
+def low_pass_mask(n: int, rho: float, method: Method) -> jnp.ndarray:
+    """Boolean mask over the n frequency bins; True = low-frequency.
+
+    For the FFT the spectrum is two-sided: low frequencies live at both
+    ends of the bin axis (bins [0, m) and (n-m, n)).  For the DCT bins
+    are one-sided: low = [0, m).
+    """
+    m = max(int(round(n * rho)), 1)
+    idx = jnp.arange(n)
+    if method == "fft":
+        # conjugate-symmetric: DC + K positive/negative frequency pairs,
+        # so the real-signal projection is orthogonal (Parseval holds)
+        k = (m - 1) // 2
+        return (idx <= k) | (idx >= n - k)
+    return idx < m
+
+
+def decompose(z: jnp.ndarray, rho: float, method: Method,
+              axis: int = -2) -> Bands:
+    """Split features into complementary low/high bands (paper eq. 1).
+
+    z: [..., S, D] (token axis = ``axis``).  ``rho`` is the fraction of
+    the spectrum treated as low-frequency.  Returns *spatial-domain*
+    bands with ``low + high == z``.
+    """
+    if method == "none":
+        return Bands(low=jnp.zeros_like(z), high=z)
+    n = z.shape[axis]
+    mask = low_pass_mask(n, rho, method)
+    shape = [1] * z.ndim
+    shape[axis] = n
+    mask = mask.reshape(shape)
+    if method == "fft":
+        zf = jnp.fft.fft(z.astype(jnp.float32), axis=axis)
+        low = jnp.fft.ifft(jnp.where(mask, zf, 0.0), axis=axis).real
+        low = low.astype(z.dtype)
+        return Bands(low=low, high=z - low)
+    if method == "dct":
+        zf = dct(z.astype(jnp.float32), axis=axis)
+        low = idct(jnp.where(mask, zf, 0.0), axis=axis).astype(z.dtype)
+        return Bands(low=low, high=z - low)
+    raise ValueError(method)
+
+
+def band_energies(z: jnp.ndarray, rho: float, method: Method,
+                  axis: int = -2) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b = decompose(z, rho, method, axis)
+    f32 = jnp.float32
+    return (jnp.sum(jnp.square(b.low.astype(f32))),
+            jnp.sum(jnp.square(b.high.astype(f32))))
+
+
+def cosine_similarity(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    af = a.astype(jnp.float32).ravel()
+    bf = b.astype(jnp.float32).ravel()
+    return jnp.vdot(af, bf) / jnp.maximum(
+        jnp.linalg.norm(af) * jnp.linalg.norm(bf), 1e-12)

@@ -1,0 +1,84 @@
+"""Hermite-polynomial trajectory predictor (paper §3.2, strategy 2).
+
+Each high-frequency coefficient is modelled as
+``h_i(s) = sum_k c_{i,k} He_k(s)`` on normalised time ``s in [-1, 1]``,
+with coefficients fitted by least squares over the K most recent
+*activated* steps.  With K == m+1 sample points the fit is exact
+interpolation (He_0..He_m span polynomials of degree m), so the
+predictor reproduces any degree-<=m polynomial trajectory exactly —
+property-tested in tests/test_core_freqca.py.
+
+The solve is a single (m+1)x(m+1) normal-equation system shared by *all*
+features (the basis depends only on the timestamps), so prediction is a
+tiny matmul over the stacked history — O(K·numel) FLOPs, negligible next
+to a transformer forward (paper: C_pred << C_full).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hermite_basis(s: jnp.ndarray, order: int) -> jnp.ndarray:
+    """Probabilists' Hermite polynomials He_0..He_order at s. -> [..., order+1].
+
+    He_0 = 1, He_1 = s, He_{k+1} = s·He_k − k·He_{k−1}.
+    """
+    s = s.astype(jnp.float32)
+    cols = [jnp.ones_like(s)]
+    if order >= 1:
+        cols.append(s)
+    for k in range(1, order):
+        cols.append(s * cols[-1] - k * cols[-2])
+    return jnp.stack(cols, axis=-1)
+
+
+def normalize_times(ts: jnp.ndarray, t_query) -> jnp.ndarray:
+    """Map times so the cached history spans [-1, 0] and extrapolation
+    targets land just beyond — keeps the basis well-conditioned."""
+    ts = ts.astype(jnp.float32)
+    lo, hi = jnp.min(ts), jnp.max(ts)
+    span = jnp.maximum(hi - lo, 1e-6)
+    return (jnp.asarray(t_query, jnp.float32) - hi) / span
+
+
+def fit_coefficients(ts: jnp.ndarray, values: jnp.ndarray, order: int):
+    """Least-squares Hermite fit.
+
+    ts: [K] timestamps of the cached history (diffusion step times);
+    values: [K, ...] feature history.  Returns coeffs [order+1, ...].
+    """
+    s = normalize_times(ts, ts)                       # [K] in [-1, 0]
+    basis = hermite_basis(s, order)                   # [K, m+1]
+    # normal equations with Tikhonov jitter for K > m+1 robustness;
+    # shapes are kept intact (no reshape(k, -1)!) so sharded feature
+    # dims survive — a flatten here turns into a full all-gather of the
+    # cache under GSPMD.
+    g = basis.T @ basis + 1e-6 * jnp.eye(order + 1, dtype=jnp.float32)
+    rhs = jnp.einsum("km,k...->m...", basis, values.astype(jnp.float32))
+    inv_g = jnp.linalg.inv(g)                         # (m+1)x(m+1) — tiny
+    return jnp.einsum("nm,m...->n...", inv_g, rhs)
+
+
+def predict(ts: jnp.ndarray, values: jnp.ndarray, t_query, order: int):
+    """Fit on (ts, values) history and evaluate at t_query. -> values[0]-like.
+
+    Equivalent to folding the solve into per-history scalar weights
+    w = B G^{-1} b_q (see kernels/freqca_fused.hermite_eval_weights) —
+    the prediction is linear in the cached history.
+    """
+    s = normalize_times(ts, ts)
+    basis = hermite_basis(s, order)                   # [K, m+1]
+    g = basis.T @ basis + 1e-6 * jnp.eye(order + 1, dtype=jnp.float32)
+    s_q = normalize_times(ts, t_query)
+    basis_q = hermite_basis(s_q, order)               # [m+1]
+    w = basis @ jnp.linalg.solve(g, basis_q)          # [K]
+    out = jnp.einsum("k,k...->...", w, values.astype(jnp.float32))
+    return out.astype(values.dtype)
+
+
+def predict_from_coeffs(coeffs: jnp.ndarray, ts: jnp.ndarray, t_query,
+                        order: int):
+    s_q = normalize_times(ts, t_query)
+    basis_q = hermite_basis(s_q, order)
+    return jnp.einsum("m,m...->...", basis_q, coeffs.astype(jnp.float32))

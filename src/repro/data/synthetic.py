@@ -1,0 +1,75 @@
+"""Procedural synthetic datasets (no external data offline).
+
+* ``shapes_batch`` — anti-aliased random ellipses/rectangles/stripes
+  rendered into [B, H, W, C] "latents"; class-conditional structure so a
+  small DiT has something real to learn (low-frequency layout + sharp
+  high-frequency edges — exactly the band structure FreqCa exploits).
+* ``lm_batch`` — a deterministic mixture of Markov token streams for the
+  LM training examples.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def shapes_batch(rng: jax.Array, batch: int, size: int = 32,
+                 channels: int = 4) -> jnp.ndarray:
+    """Render random soft shapes. Returns [B, size, size, C] in ~[-1, 1]."""
+    keys = jax.random.split(rng, 6)
+    yy, xx = jnp.meshgrid(jnp.linspace(-1, 1, size), jnp.linspace(-1, 1, size),
+                          indexing="ij")
+    cx = jax.random.uniform(keys[0], (batch, 1, 1), minval=-0.5, maxval=0.5)
+    cy = jax.random.uniform(keys[1], (batch, 1, 1), minval=-0.5, maxval=0.5)
+    rx = jax.random.uniform(keys[2], (batch, 1, 1), minval=0.2, maxval=0.6)
+    ry = jax.random.uniform(keys[3], (batch, 1, 1), minval=0.2, maxval=0.6)
+    kind = jax.random.randint(keys[4], (batch, 1, 1), 0, 3)
+    phase = jax.random.uniform(keys[5], (batch, 1, 1), minval=0, maxval=np.pi)
+
+    d_ell = ((xx - cx) / rx) ** 2 + ((yy - cy) / ry) ** 2
+    ellipse = jax.nn.sigmoid((1.0 - d_ell) * 12.0)
+    d_rect = jnp.maximum(jnp.abs(xx - cx) / rx, jnp.abs(yy - cy) / ry)
+    rect = jax.nn.sigmoid((1.0 - d_rect) * 16.0)
+    stripes = 0.5 + 0.5 * jnp.sin(8.0 * (xx * jnp.cos(phase)
+                                         + yy * jnp.sin(phase)))
+    img = jnp.where(kind == 0, ellipse, jnp.where(kind == 1, rect, stripes))
+    img = img * 2.0 - 1.0                                  # [-1, 1]
+    chans = [img]
+    for c in range(1, channels):
+        chans.append(jnp.roll(img, shift=c * 2, axis=-1) * (0.5 ** c))
+    return jnp.stack(chans, axis=-1)
+
+
+def lm_batch(rng: jax.Array, batch: int, seq_len: int,
+             vocab: int) -> Dict[str, jnp.ndarray]:
+    """Markov-chain token stream; labels are next tokens."""
+    k1, k2 = jax.random.split(rng)
+    start = jax.random.randint(k1, (batch, 1), 0, vocab)
+    steps = jax.random.randint(k2, (batch, seq_len), 1, 7)
+
+    def scan_fn(tok, step):
+        nxt = (tok * 31 + step) % vocab
+        return nxt, nxt
+
+    _, toks = jax.lax.scan(
+        lambda c, s: scan_fn(c, s), start[:, 0], steps.T)
+    tokens = toks.T
+    labels = jnp.concatenate([tokens[:, 1:], -jnp.ones((batch, 1), jnp.int32)],
+                             axis=1)
+    return {"tokens": tokens.astype(jnp.int32),
+            "labels": labels.astype(jnp.int32)}
+
+
+def data_iterator(kind: str, batch: int, seed: int = 0, **kw):
+    """Infinite host-side iterator of device-ready batches."""
+    i = 0
+    while True:
+        rng = jax.random.key(seed * 100003 + i)
+        if kind == "shapes":
+            yield {"latents": shapes_batch(rng, batch, **kw)}
+        else:
+            yield lm_batch(rng, batch, **kw)
+        i += 1

@@ -1,0 +1,117 @@
+"""Diffusion sampling loop with pluggable feature-cache policy.
+
+The whole sampler is one ``lax.scan`` over timesteps; each step is a
+``lax.cond`` between the *activated* branch (full denoiser forward +
+cache update) and the *cached* branch (FreqCa/baseline prediction of the
+CRF + the final layer only).  One compiled program regardless of policy.
+
+The denoiser is abstract: ``full_fn(x, t) -> (velocity, crf)`` and
+``from_crf_fn(crf, t) -> velocity``; both DiT and backbone-wrapped
+assigned architectures plug in (repro.models.dit).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cache as cache_lib
+from repro.core.cache import CachePolicy
+
+
+class SampleResult(NamedTuple):
+    x: jnp.ndarray                  # final latents
+    n_full: jnp.ndarray             # number of activated (full) steps
+    trajectory: Optional[jnp.ndarray] = None
+
+
+def sample(full_fn: Callable, from_crf_fn: Callable, x_init: jnp.ndarray,
+           ts: jnp.ndarray, policy: CachePolicy,
+           crf_shape: Tuple[int, ...], crf_dtype=jnp.float32,
+           return_trajectory: bool = False) -> SampleResult:
+    """Euler rectified-flow sampling from t=1 to t=0 under a cache policy.
+
+    ts: [n_steps+1] decreasing times.  crf_shape: shape of the CRF
+    feature (needed to build the static cache state).
+    """
+    n_steps = ts.shape[0] - 1
+    state0 = cache_lib.init_state(policy, crf_shape, crf_dtype)
+    # adaptive carries: (accumulator, previous input, steps-since-full,
+    # last measured prediction error)
+    tea0 = (jnp.zeros((), jnp.float32), jnp.zeros_like(x_init),
+            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32))
+
+    def step(carry, inp):
+        x, state, tea = carry
+        i, t_now, t_next = inp
+        acc, prev_x, since, err_last = tea
+
+        def full_branch(op):
+            x_, state_ = op
+            v, crf = full_fn(x_, t_now)
+            if policy.kind == "freqca_a":
+                # the prediction FreqCa would have made for THIS step is
+                # free to score against the fresh CRF (self-calibration)
+                pred = cache_lib.predict(policy, state_, t_now)
+                err = jnp.linalg.norm((pred - crf).astype(jnp.float32)) /                     jnp.maximum(jnp.linalg.norm(crf.astype(jnp.float32)),
+                                1e-6)
+            else:
+                err = jnp.zeros((), jnp.float32)
+            return v, cache_lib.update(policy, state_, crf, t_now), 1, err
+
+        def cached_branch(op):
+            x_, state_ = op
+            crf_hat = cache_lib.predict(policy, state_, t_now)
+            return (from_crf_fn(crf_hat, t_now), state_, 0,
+                    jnp.zeros((), jnp.float32))
+
+        if policy.kind == "teacache":
+            rel = jnp.mean(jnp.abs(x - prev_x)) / jnp.maximum(
+                jnp.mean(jnp.abs(prev_x)), 1e-6)
+            acc = acc + rel.astype(jnp.float32)
+            warm = state.n_valid < 1
+            act = warm | (acc > policy.tea_threshold) | (i == 0)
+            acc = jnp.where(act, 0.0, acc)
+        elif policy.kind == "freqca_a":
+            warm = state.n_valid < 3
+            # projected error of the NEXT cached step ~ (since+1)·err_last
+            projected = (since.astype(jnp.float32) + 1.0) * err_last
+            act = warm | (projected > policy.tea_threshold)
+        else:
+            act = cache_lib.should_activate(policy, state, i)
+        if policy.kind == "none":
+            v, state, used, err_new = full_branch((x, state))
+        else:
+            v, state, used, err_new = jax.lax.cond(
+                act, full_branch, cached_branch, (x, state))
+        since = jnp.where(jnp.asarray(used, bool), 0, since + 1)
+        err_last = jnp.where(jnp.asarray(used, bool), err_new, err_last)
+        dt = (t_next - t_now).astype(x.dtype)
+        x_new = x + dt * v.astype(x.dtype)
+        out = (x_new if return_trajectory else (),
+               jnp.asarray(used, jnp.int32))
+        return (x_new, state, (acc, x, since, err_last)), out
+
+    idx = jnp.arange(n_steps)
+    (x, _, _), (traj, used) = jax.lax.scan(step, (x_init, state0, tea0),
+                                           (idx, ts[:-1], ts[1:]))
+    return SampleResult(x=x, n_full=jnp.sum(used),
+                        trajectory=traj if return_trajectory else None)
+
+
+def reference_features(full_fn: Callable, x_init: jnp.ndarray,
+                       ts: jnp.ndarray):
+    """Run the un-cached sampler, returning per-step (x, crf) trajectories.
+
+    Used by the Fig-2 frequency analysis and Fig-4 MSE benchmarks.
+    """
+    def step(x, tt):
+        t_now, t_next = tt
+        v, crf = full_fn(x, t_now)
+        x_next = x + (t_next - t_now).astype(x.dtype) * v.astype(x.dtype)
+        return x_next, (x_next, crf)
+
+    x, (xs, crfs) = jax.lax.scan(step, x_init, (ts[:-1], ts[1:]))
+    return x, xs, crfs

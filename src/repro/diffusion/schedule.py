@@ -1,0 +1,30 @@
+"""Rectified-flow schedule (FLUX/Qwen-Image family).
+
+Forward process: x_t = (1 - t)·x_data + t·noise, t ∈ [0, 1].
+The model predicts velocity v = noise − x_data; sampling integrates
+dx/dt = v from t=1 (noise) to t=0 (data) with Euler steps.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def timesteps(n_steps: int, shift: float = 1.0) -> jnp.ndarray:
+    """Decreasing times t_0=1 … t_N=0 (N+1 knots for N Euler steps).
+
+    ``shift`` > 1 spends more steps near t=1 (the resolution-dependent
+    schedule shift used by FLUX).
+    """
+    u = jnp.linspace(1.0, 0.0, n_steps + 1)
+    return (shift * u) / (1.0 + (shift - 1.0) * u)
+
+
+def add_noise(x_data: jnp.ndarray, noise: jnp.ndarray, t) -> jnp.ndarray:
+    t = jnp.asarray(t, x_data.dtype)
+    while t.ndim < x_data.ndim:
+        t = t[..., None]
+    return (1.0 - t) * x_data + t * noise
+
+
+def velocity_target(x_data: jnp.ndarray, noise: jnp.ndarray) -> jnp.ndarray:
+    return noise - x_data

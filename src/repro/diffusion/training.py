@@ -1,0 +1,26 @@
+"""Rectified-flow training loss for denoisers."""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.diffusion import schedule
+
+
+def rf_loss(apply_fn: Callable, params, batch: Dict[str, jnp.ndarray],
+            rng: jax.Array):
+    """apply_fn(params, x_t, t) -> velocity. batch['latents']: [B,H,W,C]."""
+    x = batch["latents"]
+    b = x.shape[0]
+    k_t, k_n = jax.random.split(rng)
+    # logit-normal time sampling (SD3/FLUX recipe)
+    t = jax.nn.sigmoid(jax.random.normal(k_t, (b,)))
+    noise = jax.random.normal(k_n, x.shape, x.dtype)
+    x_t = schedule.add_noise(x, noise, t)
+    target = schedule.velocity_target(x, noise)
+    v = apply_fn(params, x_t, t)
+    loss = jnp.mean(jnp.square(v.astype(jnp.float32)
+                               - target.astype(jnp.float32)))
+    return loss, {"loss": loss}

@@ -1,0 +1,107 @@
+"""Tiled token-axis basis matmul — DCT-II / IDCT / fused band-split on MXU.
+
+GPU FreqCa calls cuFFT; TPUs have no FFT unit but a DCT-II along the
+token axis is ``Y = C @ X`` with a fixed S x S basis — a dense matmul
+that maps straight onto the 128x128 MXU (DESIGN.md §3).  Because
+FreqCa's low-pass path is ``low = C^T · diag(mask) · C · x``, the whole
+band-split collapses into ONE basis matmul with the precomputed
+projection matrix ``L = C^T diag(m) C`` — ``band_split_basis`` below.
+
+Kernel: classic 3-loop tiled matmul, K innermost in the grid with
+accumulation in the output tile (revisited across the K grid dim), all
+tiles MXU-aligned (multiples of 128 for real shapes; smaller shapes run
+single-tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import numpy as np
+
+from repro.core import frequency
+
+
+def _matmul_kernel(basis_ref, x_ref, o_ref):
+    """Grid (i over S-tiles, j over D-tiles, k over K-tiles); K innermost."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        basis_ref[...], x_ref[...],
+        preferred_element_type=o_ref.dtype)
+
+
+def token_basis_matmul(basis: jnp.ndarray, x: jnp.ndarray,
+                       block_s: int = 128, block_d: int = 128,
+                       block_k: int = 128, interpret: bool = True):
+    """y[..., s, d] = sum_k basis[s, k] * x[..., k, d].
+
+    basis: [S, S]; x: [B, S, D].  Tiles are VMEM-resident:
+    (block_s x block_k) basis + (block_k x block_d) x + accumulator.
+    """
+    b, s, d = x.shape
+    bs = min(block_s, s)
+    bd = min(block_d, d)
+    bk = min(block_k, s)
+    assert s % bs == 0 and d % bd == 0 and s % bk == 0, (s, d, bs, bd, bk)
+    grid = (s // bs, d // bd, s // bk)
+
+    def run_one(x2):  # [S, D]
+        return pl.pallas_call(
+            _matmul_kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bs, bk), lambda i, j, k: (i, k)),
+                pl.BlockSpec((bk, bd), lambda i, j, k: (k, j)),
+            ],
+            out_specs=pl.BlockSpec((bs, bd), lambda i, j, k: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((s, d), jnp.float32),
+            interpret=interpret,
+        )(basis.astype(jnp.float32), x2.astype(jnp.float32))
+
+    y = jax.vmap(run_one)(x)
+    return y.astype(x.dtype)
+
+
+def _low_pass_mask_np(n: int, rho: float, method: str) -> np.ndarray:
+    """Pure-numpy twin of frequency.low_pass_mask (host-side basis calc)."""
+    m = max(int(round(n * rho)), 1)
+    idx = np.arange(n)
+    if method == "fft":
+        k = (m - 1) // 2
+        return (idx <= k) | (idx >= n - k)
+    return idx < m
+
+
+@functools.lru_cache(maxsize=16)
+def _band_split_basis_np(s: int, rho: float, method: str):
+    """Low-pass projection L = C^T diag(mask) C (idempotent, symmetric)."""
+    if method == "dct":
+        c = frequency._dct_basis_np(s)
+        mask = _low_pass_mask_np(s, rho, "dct")
+        return (c.T * mask.astype(np.float64)) @ c
+    # fft: real low-pass projection is circulant; build from the mask
+    mask = _low_pass_mask_np(s, rho, "fft")
+    f = np.fft.fft(np.eye(s), axis=0)
+    finv = np.fft.ifft(np.diag(mask.astype(np.float64)) @ f, axis=0)
+    return np.real(finv)
+
+
+def band_split_basis(s: int, rho: float, method: str = "dct",
+                     dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.asarray(_band_split_basis_np(s, rho, method), dtype)
+
+
+def band_split(x: jnp.ndarray, rho: float, method: str = "dct",
+               interpret: bool = True):
+    """FreqCa band split as a single tiled matmul: returns (low, high)."""
+    s = x.shape[-2]
+    basis = band_split_basis(s, rho, method)
+    low = token_basis_matmul(basis, x, interpret=interpret)
+    return low, x - low

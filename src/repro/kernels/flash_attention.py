@@ -1,0 +1,115 @@
+"""Flash attention (GQA) Pallas kernel — the prefill/train hot spot.
+
+Grid: (batch x kv_heads x q_groups, q blocks, kv blocks) with the kv
+dimension SEQUENTIAL; the online-softmax state (acc, running max m,
+normaliser l) lives in VMEM scratch across kv steps and the output tile
+is written once on the last step — the TPU-native version of the
+jnp blockwise path in ``models/attention.blockwise_sdpa`` (its oracle).
+
+This is what the roofline's "memory term is an upper bound" note refers
+to (EXPERIMENTS.md §Roofline): the XLA-level blockwise path materialises
+[qb x kb] logits tiles at fusion boundaries, while this kernel keeps
+them in VMEM/VREGs.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, causal: bool, window: int, kb: int, nk: int,
+                  scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [qb, hd]
+    k = k_ref[0, 0].astype(jnp.float32)          # [kb, hd]
+    v = v_ref[0, 0].astype(jnp.float32)          # [kb, hd]
+    qb = q.shape[0]
+
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    q_pos = qi * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 0)
+    k_pos = ki * kb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 1)
+    mask = jnp.ones((qb, kb), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + \
+        jnp.dot(p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, q_per_kv: int, causal: bool = True,
+                    window: int = 0, q_block: int = 128,
+                    kv_block: int = 128, interpret: bool = True):
+    """q: [B, S, Hq, hd]; k, v: [B, T, Hkv, hd] -> [B, S, Hq, hd]."""
+    b, s, hq, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    qb = min(q_block, s)
+    kb = min(kv_block, t)
+    assert s % qb == 0 and t % kb == 0, (s, t, qb, kb)
+    nq, nk = s // qb, t // kb
+    g = q_per_kv
+    scale = 1.0 / math.sqrt(hd)
+
+    # layout: fold (b, kv_head, group) into one parallel axis; repeat K/V
+    # per group via index mapping (no materialised copy)
+    qg = q.reshape(b, s, hkv, g, hd).transpose(0, 2, 3, 1, 4) \
+        .reshape(b * hkv * g, nq, qb, hd)
+    kg = k.transpose(0, 2, 1, 3).reshape(b * hkv, nk, kb, hd)
+    vg = v.transpose(0, 2, 1, 3).reshape(b * hkv, nk, kb, hd)
+
+    import functools
+    kernel = functools.partial(_flash_kernel, causal=causal, window=window,
+                               kb=kb, nk=nk, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hkv * g, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, qb, hd), lambda i, qi, ki: (i, qi, 0, 0)),
+            pl.BlockSpec((1, 1, kb, hd),
+                         lambda i, qi, ki: (i // g, ki, 0, 0)),
+            pl.BlockSpec((1, 1, kb, hd),
+                         lambda i, qi, ki: (i // g, ki, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qb, hd),
+                               lambda i, qi, ki: (i, qi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv * g, nq, qb, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb, hd), jnp.float32),
+            pltpu.VMEM((qb,), jnp.float32),
+            pltpu.VMEM((qb,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg)
+    return out.reshape(b, hkv, g, s, hd).transpose(0, 3, 1, 2, 4) \
+        .reshape(b, s, hq, hd)

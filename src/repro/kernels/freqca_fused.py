@@ -1,0 +1,76 @@
+"""Fused FreqCa cached-step kernel.
+
+The cached step is pure memory traffic: read the low band + K high-band
+history tensors, combine with K scalar Hermite weights, write ẑ.  A
+naive implementation is K+1 separate elementwise kernels (2(K+1) HBM
+passes); this kernel does it in ONE pass over [token x d_model] tiles —
+4 reads + 1 write for the paper's K=3, putting the cached step at the
+memory-roofline minimum (DESIGN.md §3).
+
+The Hermite evaluation weights are computed host-side (they depend only
+on the K cached timestamps and the query time — a (m+1)-vector) and
+passed as a tiny operand broadcast to every tile.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import hermite
+
+
+def _fused_kernel(w_ref, low_ref, hist_ref, o_ref):
+    """low [bs, bd]; hist [K, bs, bd]; w [K]; o = low + sum_k w_k hist_k."""
+    acc = low_ref[...].astype(jnp.float32)
+    k = hist_ref.shape[0]
+    for i in range(k):                      # K is tiny & static: unrolled FMA
+        acc += w_ref[i] * hist_ref[i].astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def hermite_eval_weights(ts: jnp.ndarray, t_query, order: int) -> jnp.ndarray:
+    """Weights w st. prediction = sum_k w_k · hist_k (least-squares fold).
+
+    Solving the normal equations G c = B^T v and evaluating b_q^T c is
+    linear in v, so the whole predictor folds into per-history-entry
+    scalars: w = B G^{-1} b_q.
+    """
+    s = hermite.normalize_times(ts, ts)
+    basis = hermite.hermite_basis(s, order)            # [K, m+1]
+    g = basis.T @ basis + 1e-6 * jnp.eye(order + 1, dtype=jnp.float32)
+    s_q = hermite.normalize_times(ts, t_query)
+    b_q = hermite.hermite_basis(s_q, order)            # [m+1]
+    return basis @ jnp.linalg.solve(g, b_q)            # [K]
+
+
+def freqca_predict_fused(low: jnp.ndarray, high_hist: jnp.ndarray,
+                         ts: jnp.ndarray, t_query, order: int,
+                         block_s: int = 256, block_d: int = 256,
+                         interpret: bool = True) -> jnp.ndarray:
+    """ẑ = low + Hermite(high_hist)(t_query), one fused pass.
+
+    low: [B, S, D]; high_hist: [K, B, S, D]; ts: [K].
+    """
+    w = hermite_eval_weights(ts, t_query, order)
+    kh, b, s, d = high_hist.shape
+    bs = min(block_s, s)
+    bd = min(block_d, d)
+    assert s % bs == 0 and d % bd == 0, (s, d, bs, bd)
+    grid = (s // bs, d // bd)
+
+    def run_one(low2, hist2):  # [S, D], [K, S, D]
+        return pl.pallas_call(
+            _fused_kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((kh,), lambda i, j: (0,)),
+                pl.BlockSpec((bs, bd), lambda i, j: (i, j)),
+                pl.BlockSpec((kh, bs, bd), lambda i, j: (0, i, j)),
+            ],
+            out_specs=pl.BlockSpec((bs, bd), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((s, d), low2.dtype),
+            interpret=interpret,
+        )(w, low2, hist2)
+
+    return jax.vmap(run_one, in_axes=(0, 1))(low, high_hist)

@@ -1,0 +1,60 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute in ``interpret=True`` mode
+(the kernel body runs as traced jnp, validating the exact program the
+TPU would run); on a real TPU backend set ``interpret=False``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dct as dct_kernel
+from repro.kernels import freqca_fused as fused_kernel
+from repro.kernels import ssd_scan as ssd_kernel
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_d", "block_k"))
+def dct_tokens(x: jnp.ndarray, block_s: int = 128, block_d: int = 128,
+               block_k: int = 128) -> jnp.ndarray:
+    """Orthonormal DCT-II along the token axis of [B, S, D]."""
+    basis = dct_kernel.frequency.dct_basis(x.shape[-2])
+    return dct_kernel.token_basis_matmul(basis, x, block_s, block_d, block_k,
+                                         interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("rho", "method"))
+def band_split(x: jnp.ndarray, rho: float = 0.0625, method: str = "dct"):
+    """FreqCa band split (low, high) as one fused projection matmul."""
+    return dct_kernel.band_split(x, rho, method, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("order",))
+def freqca_predict(low: jnp.ndarray, high_hist: jnp.ndarray,
+                   ts: jnp.ndarray, t_query, order: int = 2) -> jnp.ndarray:
+    """Fused cached-step reconstruction: ẑ = low + Hermite(high)(t)."""
+    return fused_kernel.freqca_predict_fused(low, high_hist, ts, t_query,
+                                             order, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd(x, dt, A, B, C, chunk: int = 256):
+    """Mamba2 SSD chunk scan."""
+    return ssd_kernel.ssd_chunk_scan(x, dt, A, B, C, chunk,
+                                     interpret=INTERPRET)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("q_per_kv", "causal", "window",
+                                    "q_block", "kv_block"))
+def flash(q, k, v, q_per_kv: int, causal: bool = True, window: int = 0,
+          q_block: int = 128, kv_block: int = 128):
+    """Flash attention (GQA) kernel."""
+    from repro.kernels import flash_attention as fa
+    return fa.flash_attention(q, k, v, q_per_kv, causal=causal,
+                              window=window, q_block=q_block,
+                              kv_block=kv_block, interpret=INTERPRET)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import frequency, hermite
+from repro.models import ssm
+
+
+def token_basis_matmul_ref(basis: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """y[..., s, d] = basis @ x along the token axis."""
+    return jnp.einsum("sk,bkd->bsd", basis.astype(jnp.float32),
+                      x.astype(jnp.float32)).astype(x.dtype)
+
+
+def band_split_ref(x: jnp.ndarray, rho: float, method: str = "dct"):
+    bands = frequency.decompose(x, rho, method, axis=-2)
+    return bands.low, bands.high
+
+
+def freqca_predict_ref(low: jnp.ndarray, high_hist: jnp.ndarray,
+                       ts: jnp.ndarray, t_query, order: int) -> jnp.ndarray:
+    high = hermite.predict(ts, high_hist, t_query, order)
+    return (low.astype(jnp.float32)
+            + high.astype(jnp.float32)).astype(low.dtype)
+
+
+def ssd_chunked_ref(x, dt, A, B, C, chunk: int):
+    """Delegates to the model's pure-jnp chunked SSD (itself validated
+    against the naive per-token recurrence in tests)."""
+    return ssm.ssd_chunked(x, dt, A, B, C, chunk)
+
+
+def ssd_naive_ref(x, dt, A, B, C):
+    """O(S) per-token recurrence — the ground-truth SSD semantics.
+
+    x: [b, s, h, p]; dt: [b, s, h]; A: [h]; B, C: [b, s, n].
+    """
+    import jax
+    f32 = jnp.float32
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp
+        y, state = ssm.ssd_recurrent_step(x_t, dt_t, A, b_t, c_t, state)
+        return state, y
+
+    init = jnp.zeros((b, h, p, n), f32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+    state, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state

@@ -1,0 +1,101 @@
+"""Mamba2 SSD (state-space duality) chunk-scan Pallas kernel.
+
+TPU-native layout of the SSD algorithm [arXiv:2405.21060]: the grid is
+(batch x heads, chunks) with the chunk dimension SEQUENTIAL
+(``dimension_semantics=("parallel", "arbitrary")`` on real TPU); the
+running state [d_state x head_dim] lives in a VMEM scratch accumulator
+across chunk steps, so the recurrence never round-trips HBM.  Within a
+chunk everything is dense [Q x Q] / [Q x N] matmuls on the MXU — that
+is the whole point of SSD: the sequential part is O(S/Q) cheap state
+updates, the parallel part is MXU-shaped.
+
+Per chunk (A < 0 per head, a = exp(cumsum(dt*A))):
+  y_diag = ((C Bᵀ) ∘ L) (dt ∘ x)      L_ij = a_i / a_j  (j <= i)
+  y_off  = a ∘ (C · state)
+  state ← a_Q · state + Σ_j (a_Q / a_j) dt_j B_jᵀ x_j
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_CLIP = -60.0  # exp underflow guard for cumulative decay
+
+
+def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, state_ref):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    f32 = jnp.float32
+    x = x_ref[0, 0].astype(f32)                  # [Q, P]
+    dt = dt_ref[0, 0].astype(f32)                # [Q]
+    b = b_ref[0, 0].astype(f32)                  # [Q, N]
+    c = c_ref[0, 0].astype(f32)                  # [Q, N]
+    a_h = a_ref[0].astype(f32)                # scalar A (negative)
+
+    da = dt * a_h                             # [Q]
+    cum = jnp.cumsum(da)                      # [Q]
+    # intra-chunk: L_ij = exp(cum_i - cum_j) for j <= i
+    q = x.shape[0]
+    diff = cum[:, None] - cum[None, :]
+    row = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    l_mat = jnp.where(col <= row, jnp.exp(jnp.maximum(diff, NEG_CLIP)), 0.0)
+    scores = jnp.dot(c, b.T, preferred_element_type=f32) * l_mat  # [Q, Q]
+    y = jnp.dot(scores * dt[None, :], x, preferred_element_type=f32)
+
+    # inter-chunk: contribution of the carried state
+    state = state_ref[...]                    # [N, P]
+    decay_in = jnp.exp(jnp.maximum(cum, NEG_CLIP))[:, None]       # [Q, 1]
+    y += decay_in * jnp.dot(c, state, preferred_element_type=f32)
+
+    # state update
+    decay_out = jnp.exp(jnp.maximum(cum[-1] - cum, NEG_CLIP))     # [Q]
+    weighted_b = b * (dt * decay_out)[:, None]                    # [Q, N]
+    state_ref[...] = (jnp.exp(jnp.maximum(cum[-1], NEG_CLIP)) * state
+                      + jnp.dot(weighted_b.T, x,
+                                preferred_element_type=f32))
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_chunk_scan(x, dt, A, B, C, chunk: int = 256,
+                   interpret: bool = True):
+    """Pallas SSD scan.  x: [b, s, h, p]; dt: [b, s, h]; A: [h];
+    B, C: [b, s, n].  Returns y: [b, s, h, p] (no D-skip / gating —
+    those stay in the surrounding jnp block)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    # layout: merge (b, h) into the parallel grid axis
+    xg = x.transpose(0, 2, 1, 3).reshape(b * h, nc, q, p)
+    dtg = dt.transpose(0, 2, 1).reshape(b * h, nc, q)
+    bg = jnp.broadcast_to(B[:, None], (b, h, s, n)).reshape(b * h, nc, q, n)
+    cg = jnp.broadcast_to(C[:, None], (b, h, s, n)).reshape(b * h, nc, q, n)
+    ag = jnp.broadcast_to(A[None, :], (b, h)).reshape(b * h)
+
+    y = pl.pallas_call(
+        _ssd_kernel,
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, c: (i,)),            # A
+            pl.BlockSpec((1, 1, q, p), lambda i, c: (i, c, 0, 0)),
+            pl.BlockSpec((1, 1, q), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, c: (i, c, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, c: (i, c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q, p), lambda i, c: (i, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, nc, q, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(ag, xg, dtg, bg, cg)
+    return y.reshape(b, h, s, p).transpose(0, 2, 1, 3)

@@ -1,0 +1,1 @@
+from repro.models import attention, blocks, common, dit, encdec, mlp, moe, ssm, transformer  # noqa: F401

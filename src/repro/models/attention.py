@@ -1,0 +1,258 @@
+"""GQA attention with RoPE, sliding window, KV cache, and cross-attention.
+
+Shapes use [batch, seq, heads, head_dim] throughout.  The KV cache is a
+pair of [batch, max_len, kv_heads, head_dim] buffers plus an int32 write
+index; decode inserts one token and attends over the valid prefix.  A
+sliding-window cache is the same buffer used as a ring — positions are
+tracked explicitly so RoPE stays correct past one window.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import ParamSpec
+
+NEG_INF = -1e30
+
+
+def attn_specs(cfg: ModelConfig, cross: bool = False):
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    s = {
+        "wq": ParamSpec((d, nq, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, nkv, hd), ("embed", "kv_heads", "kv_head_dim")),
+        "wv": ParamSpec((d, nkv, hd), ("embed", "kv_heads", "kv_head_dim")),
+        "wo": ParamSpec((nq, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.use_bias:
+        s["bq"] = ParamSpec((nq, hd), ("heads", "head_dim"), init="zeros")
+        s["bk"] = ParamSpec((nkv, hd), ("kv_heads", "kv_head_dim"), init="zeros")
+        s["bv"] = ParamSpec((nkv, hd), ("kv_heads", "kv_head_dim"), init="zeros")
+    return s
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray          # [B, max_len, n_kv, hd]
+    v: jnp.ndarray          # [B, max_len, n_kv, hd]
+    index: jnp.ndarray      # [] int32 — next logical position (monotonic)
+
+    @classmethod
+    def zeros(cls, batch, max_len, n_kv, head_dim, dtype):
+        return cls(
+            k=jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+            v=jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+            index=jnp.zeros((), jnp.int32),
+        )
+
+    @classmethod
+    def abstract(cls, batch, max_len, n_kv, head_dim, dtype):
+        return cls(
+            k=jax.ShapeDtypeStruct((batch, max_len, n_kv, head_dim), dtype),
+            v=jax.ShapeDtypeStruct((batch, max_len, n_kv, head_dim), dtype),
+            index=jax.ShapeDtypeStruct((), jnp.int32),
+        )
+
+
+def _qkv(params, x, cfg: ModelConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, q_per_kv: int):
+    """q:[B,S,Hq,hd] k,v:[B,T,Hkv,hd] mask:[B?,S,T] broadcastable."""
+    b, s, hq, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    q = q.reshape(b, s, hkv, q_per_kv, hd)
+    logits = jnp.einsum("bsgqk,btgk->bgqst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(hd).astype(jnp.float32)
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgqst,btgk->bsgqk", probs.astype(v.dtype), v)
+    return out.reshape(b, s, hq, hd)
+
+
+def blockwise_sdpa(q, k, v, q_per_kv: int, causal: bool = True,
+                   window: int = 0, q_block: int = 0,
+                   kv_block: int = 1024):
+    """Flash-style blockwise attention with online softmax.
+
+    Memory is O(q_block x kv_block) instead of O(S^2) — the XLA-level
+    equivalent of a fused attention kernel, required for the 32k/500k
+    input shapes.  q: [B,S,Hq,hd]; k,v: [B,T,Hkv,hd].
+
+    ``q_block=0`` (default) = single query tile: scanning over a
+    sharded q-block axis forces GSPMD to replicate attention compute
+    across the model axis (measured 8x FLOPs on deepseek prefill,
+    §Perf B2) — with one tile only the kv scan remains, the q dimension
+    stays sharded, and K/V are gathered once per layer instead of once
+    per q block.
+    """
+    b, s, hq, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    # q_block=0 (default): one query tile — under sequence parallelism
+    # the q dim is sharded, and any q-scan would force GSPMD to
+    # replicate attention compute across the model axis (§Perf B2/B3)
+    qb = min(q_block, s) if q_block else s
+    kb = min(kv_block, t)
+    assert s % qb == 0 and t % kb == 0, (s, qb, t, kb)
+    nq, nk = s // qb, t // kb
+    g = q_per_kv
+    f32 = jnp.float32
+    scale = 1.0 / math.sqrt(hd)
+
+    qr = q.reshape(b, nq, qb, hkv, g, hd)
+    kr = k.reshape(b, nk, kb, hkv, hd)
+    vr = v.reshape(b, nk, kb, hkv, hd)
+
+    def q_step(_, qi_inp):
+        qi, q_tile = qi_inp                       # q_tile [b,qb,hkv,g,hd]
+        q_pos = qi * qb + jnp.arange(qb)
+
+        # remat: without this the scan saves O(S^2) logits/probs residuals
+        # for backward — the whole point of blockwise attention is that
+        # they are recomputed per tile instead.
+        @functools.partial(jax.checkpoint,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+        def kv_step(carry, kv_inp):
+            acc, m, l = carry
+            ki, k_tile, v_tile = kv_inp
+            k_pos = ki * kb + jnp.arange(kb)
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk", q_tile.astype(f32),
+                                k_tile.astype(f32)) * scale
+            mask = jnp.ones((qb, kb), bool)
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window > 0:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, v_tile.astype(f32))
+            acc = acc * corr[..., None] + pv
+            return (acc, m_new, l_new), ()
+
+        acc0 = jnp.zeros((b, hkv, g, qb, hd), f32)
+        m0 = jnp.full((b, hkv, g, qb), NEG_INF, f32)
+        l0 = jnp.zeros((b, hkv, g, qb), f32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (jnp.arange(nk), jnp.moveaxis(kr, 1, 0), jnp.moveaxis(vr, 1, 0)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return (), out.transpose(0, 3, 1, 2, 4)     # [b,qb,hkv,g,hd]
+
+    _, out = jax.lax.scan(q_step, (),
+                          (jnp.arange(nq), jnp.moveaxis(qr, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, hq, hd)
+    return out.astype(q.dtype)
+
+
+# full-materialisation threshold: above this, use blockwise attention
+_BLOCKWISE_MIN_SEQ = 2048
+
+
+def causal_mask(s: int, window: int = 0, offset: int = 0) -> jnp.ndarray:
+    """[1, S, S+offset] causal (optionally sliding-window) mask."""
+    qpos = jnp.arange(s)[:, None] + offset
+    kpos = jnp.arange(s + offset)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m[None]
+
+
+def self_attention(params, x, cfg: ModelConfig, positions=None, window: int = 0,
+                   causal: bool = True, constrain_heads=None):
+    """Full-sequence (train / prefill) self-attention.
+
+    ``constrain_heads`` pins [B,S,H,hd] projections to the TP layout
+    (same Megatron-SP switch as the FFN hook — without it, SP-sharded
+    inputs make every attention weight gradient a full-size f32
+    partial)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _qkv(params, x, cfg, positions)
+    if constrain_heads is not None:
+        q = constrain_heads(q)
+    win = window or cfg.sliding_window
+    if s >= _BLOCKWISE_MIN_SEQ:
+        out = blockwise_sdpa(q, k, v, cfg.q_per_kv, causal=causal, window=win)
+    else:
+        if causal:
+            mask = causal_mask(s, window=win)
+        else:
+            mask = jnp.ones((1, s, s), bool)
+        out = _sdpa(q, k, v, mask, cfg.q_per_kv)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+def decode_self_attention(params, x, cfg: ModelConfig, cache: KVCache,
+                          window: int = 0):
+    """One-token decode against a KV cache.
+
+    ``window > 0`` treats the cache as a ring buffer of that size; the
+    logical position keeps increasing so RoPE stays absolute.
+    """
+    b, s, _ = x.shape
+    assert s == 1, "decode step consumes exactly one new token"
+    max_len = cache.k.shape[1]
+    pos = cache.index
+    positions = jnp.broadcast_to(pos[None], (b, 1)).astype(jnp.int32)
+    q, k_new, v_new = _qkv(params, x, cfg, positions)
+    slot = jnp.where(window > 0, pos % max_len, pos).astype(jnp.int32)
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype),
+                                     (0, slot, 0, 0))
+    kpos = jnp.arange(max_len)
+    if window > 0:
+        # ring: slot i holds logical position p iff p = largest value
+        # <= pos with p % max_len == i
+        logical = kpos + (pos - kpos) // max_len * max_len
+        valid = (logical >= 0) & (logical <= pos) & (logical > pos - window)
+    else:
+        valid = kpos <= pos
+    mask = jnp.broadcast_to(valid[None, None, :], (b, 1, max_len))
+    out = _sdpa(q, k, v, mask, cfg.q_per_kv)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, KVCache(k=k, v=v, index=pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (enc-dec decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_specs(cfg: ModelConfig):
+    return attn_specs(cfg, cross=True)
+
+
+def cross_attention(params, x, memory, cfg: ModelConfig):
+    """x: [B,S,d] decoder states; memory: [B,T,d] encoder output."""
+    b, s, _ = x.shape
+    t = memory.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", memory, params["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", memory, params["wv"].astype(x.dtype))
+    if s * t >= _BLOCKWISE_MIN_SEQ ** 2:
+        out = blockwise_sdpa(q, k, v, cfg.q_per_kv, causal=False)
+    else:
+        mask = jnp.ones((1, s, t), bool)
+        out = _sdpa(q, k, v, mask, cfg.q_per_kv)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))

@@ -1,0 +1,230 @@
+"""Decoder blocks + layer stacks.
+
+A block = pre-norm mixer (attention or Mamba2 SSD) + pre-norm FFN (dense
+SwiGLU or MoE).  Homogeneous stacks are a single ``lax.scan`` over stacked
+layer params (small HLO, fast compile — essential for the 512-device
+dry-run).  Hybrid (Jamba-style) stacks scan over *groups* of
+``attn_every`` layers with the group body unrolled, so the 1:7
+mamba:attention interleave and alternating dense/MoE FFNs live inside one
+scanned group.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common, mlp, moe, ssm
+from repro.models.common import ParamSpec
+
+
+class BlockAux(NamedTuple):
+    load_balance_loss: jnp.ndarray
+    router_z_loss: jnp.ndarray
+    drop_fraction: jnp.ndarray
+
+    @classmethod
+    def zero(cls):
+        z = jnp.zeros((), jnp.float32)
+        return cls(z, z, z)
+
+    def __add__(self, other):
+        return BlockAux(*[a + b for a, b in zip(self, other)])
+
+
+def block_specs(cfg: ModelConfig, kind: str, is_moe: bool):
+    s: Dict[str, Any] = {"norm1": common.rmsnorm_specs(cfg.d_model)}
+    if kind == "attn":
+        s["attn"] = attention.attn_specs(cfg)
+    else:
+        s["ssm"] = ssm.ssm_specs(cfg)
+    if is_moe or cfg.d_ff > 0:
+        s["norm2"] = common.rmsnorm_specs(cfg.d_model)
+        s["ffn"] = moe.moe_specs(cfg) if is_moe else mlp.mlp_specs(cfg)
+    return s
+
+
+def _mixer_full(params, x, cfg: ModelConfig, kind: str, window: int,
+                causal: bool = True, constrain_heads=None):
+    if kind == "attn":
+        return attention.self_attention(params["attn"], x, cfg, window=window,
+                                        causal=causal,
+                                        constrain_heads=constrain_heads)
+    return ssm.ssm_block(params["ssm"], x, cfg)
+
+
+def _ffn(params, x, cfg: ModelConfig, is_moe: bool,
+         constrain_ffn=None) -> Tuple[jnp.ndarray, BlockAux]:
+    if is_moe:
+        fn = moe.moe_ffn_gather if cfg.moe.impl == "gather" else moe.moe_ffn
+        y, aux = fn(params["ffn"], x, cfg)
+        return y, BlockAux(aux.load_balance_loss, aux.router_z_loss,
+                           aux.drop_fraction)
+    return mlp.mlp(params["ffn"], x, constrain_ffn=constrain_ffn), \
+        BlockAux.zero()
+
+
+def block_full(params, x, cfg: ModelConfig, kind: str, is_moe: bool,
+               window: int = 0, causal: bool = True, constrain_ffn=None,
+               constrain_heads=None):
+    """Full-sequence block (train / prefill)."""
+    h = x + _mixer_full(params, common.rmsnorm(params["norm1"], x, cfg.norm_eps),
+                        cfg, kind, window, causal,
+                        constrain_heads=constrain_heads)
+    if "ffn" not in params:
+        return h, BlockAux.zero()
+    f, aux = _ffn(params, common.rmsnorm(params["norm2"], h, cfg.norm_eps),
+                  cfg, is_moe, constrain_ffn=constrain_ffn)
+    return h + f, aux
+
+
+def block_decode(params, x, cfg: ModelConfig, kind: str, is_moe: bool,
+                 cache, window: int = 0):
+    """One-token decode block."""
+    hin = common.rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if kind == "attn":
+        y, cache = attention.decode_self_attention(params["attn"], hin, cfg,
+                                                   cache, window=window)
+    else:
+        y, cache = ssm.ssm_decode_step(params["ssm"], hin, cfg, cache)
+    h = x + y
+    if "ffn" not in params:
+        return h, cache, BlockAux.zero()
+    f, aux = _ffn(params, common.rmsnorm(params["norm2"], h, cfg.norm_eps),
+                  cfg, is_moe)
+    return h + f, cache, aux
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+def _layer_plan(cfg: ModelConfig):
+    """Return (group_size, n_groups, [(kind, is_moe)] per position-in-group).
+
+    Homogeneous stacks use group_size == 1 scanned n_layers times; hybrid
+    stacks group ``attn_every`` layers.
+    """
+    kinds = cfg.layer_kinds()
+    moes = tuple(cfg.is_moe_layer(i) for i in range(cfg.n_layers))
+    if cfg.family == "hybrid" and cfg.attn_every > 0:
+        gs = cfg.attn_every
+        # MoE cadence must align with the group for the scan to be valid
+        assert cfg.n_layers % gs == 0
+        plan = tuple(zip(kinds[:gs], moes[:gs]))
+        for g in range(cfg.n_layers // gs):
+            assert tuple(zip(kinds[g * gs:(g + 1) * gs],
+                             moes[g * gs:(g + 1) * gs])) == plan
+        return gs, cfg.n_layers // gs, plan
+    # homogeneous check
+    assert all(k == kinds[0] for k in kinds)
+    assert all(m == moes[0] for m in moes)
+    return 1, cfg.n_layers, ((kinds[0], moes[0]),)
+
+
+def stack_specs(cfg: ModelConfig):
+    gs, ng, plan = _layer_plan(cfg)
+    group = {f"l{i}": block_specs(cfg, kind, is_moe)
+             for i, (kind, is_moe) in enumerate(plan)}
+    return common.stack_specs(group, ng)
+
+
+def stack_cache_abstract(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    """Abstract (ShapeDtypeStruct) decode cache for the whole stack."""
+    gs, ng, plan = _layer_plan(cfg)
+    def one(kind):
+        if kind == "attn":
+            c = attention.KVCache.abstract(batch, max_len, cfg.n_kv_heads,
+                                           cfg.head_dim, dtype)
+        else:
+            c = ssm.SSMCache.abstract(batch, cfg, dtype)
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((ng,) + s.shape, s.dtype), c)
+    return {f"l{i}": one(kind) for i, (kind, _) in enumerate(plan)}
+
+
+def stack_cache_axes(cfg: ModelConfig):
+    """Logical-axis tuples mirroring ``stack_cache_abstract`` structure."""
+    gs, ng, plan = _layer_plan(cfg)
+
+    def one(kind):
+        if kind == "attn":
+            return attention.KVCache(
+                k=("layer", "batch", "len", "kv_heads", "kv_head_dim"),
+                v=("layer", "batch", "len", "kv_heads", "kv_head_dim"),
+                index=("layer",))
+        return ssm.SSMCache(
+            conv=("layer", "batch", None, "inner"),
+            state=("layer", "batch", "ssm_heads", None, None))
+    return {f"l{i}": one(kind) for i, (kind, _) in enumerate(plan)}
+
+
+def stack_cache_zeros(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    gs, ng, plan = _layer_plan(cfg)
+    def one(kind):
+        if kind == "attn":
+            c = attention.KVCache.zeros(batch, max_len, cfg.n_kv_heads,
+                                        cfg.head_dim, dtype)
+        else:
+            c = ssm.SSMCache.zeros(batch, cfg, dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (ng,) + a.shape), c)
+    return {f"l{i}": one(kind) for i, (kind, _) in enumerate(plan)}
+
+
+def stack_full(params, x, cfg: ModelConfig, window: int = 0,
+               causal: bool = True, remat: Optional[bool] = None,
+               constrain=None, constrain_ffn=None, constrain_heads=None):
+    """Run the full layer stack over a sequence.
+
+    Returns (hidden, aux).  ``hidden`` is the Cumulative Residual Feature
+    (CRF) of the paper — the input embedding plus every residual update.
+
+    ``constrain`` (optional) re-pins the activation sharding on the scan
+    carry each group — without it GSPMD may solve for replicated
+    activations across the batch axis.
+    """
+    gs, ng, plan = _layer_plan(cfg)
+    use_remat = cfg.remat if remat is None else remat
+    if constrain is None:
+        constrain = lambda t: t
+    x = constrain(x)
+
+    def group_body(h, group_params):
+        aux = BlockAux.zero()
+        for i, (kind, is_moe) in enumerate(plan):
+            h, a = block_full(group_params[f"l{i}"], h, cfg, kind, is_moe,
+                              window=window, causal=causal,
+                              constrain_ffn=constrain_ffn,
+                              constrain_heads=constrain_heads)
+            h = constrain(h)
+            aux = aux + a
+        return h, aux
+
+    body = jax.checkpoint(group_body) if use_remat else group_body
+    h, aux = jax.lax.scan(lambda c, p: body(c, p), x, params)
+    aux = jax.tree.map(lambda a: jnp.mean(a) / len(plan), aux)
+    return h, BlockAux(*aux)
+
+
+def stack_decode(params, x, cfg: ModelConfig, cache, window: int = 0):
+    """One-token decode through the stack. Returns (hidden, new_cache, aux)."""
+    gs, ng, plan = _layer_plan(cfg)
+
+    def group_body(h, inp):
+        group_params, group_cache = inp
+        aux = BlockAux.zero()
+        new_cache = {}
+        for i, (kind, is_moe) in enumerate(plan):
+            h, c, a = block_decode(group_params[f"l{i}"], h, cfg, kind, is_moe,
+                                   group_cache[f"l{i}"], window=window)
+            new_cache[f"l{i}"] = c
+            aux = aux + a
+        return h, (new_cache, aux)
+
+    h, (new_cache, aux) = jax.lax.scan(group_body, x, (params, cache))
+    aux = jax.tree.map(lambda a: jnp.mean(a) / len(plan), aux)
+    return h, new_cache, BlockAux(*aux)

@@ -1,0 +1,147 @@
+"""Parameter-spec system + shared layers (RMSNorm, RoPE, embeddings).
+
+Every module exposes ``specs(cfg) -> pytree[ParamSpec]``; generic helpers
+turn a spec tree into real params (``init_params``), abstract
+ShapeDtypeStructs for the dry-run (``abstract_params``) or logical-axis
+PartitionSpec inputs (``logical_axes``).  Keeping shapes/axes/initialisers
+in one place is what lets ``launch/dryrun.py`` lower every architecture
+without allocating a single real weight.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axis per dim
+    init: str = "normal"                     # normal | zeros | ones | embed
+    scale: Optional[float] = None            # stddev override
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _initializer(spec: ParamSpec, key, dtype):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "embed":
+        std = spec.scale if spec.scale is not None else 0.02
+        return (jax.random.normal(key, spec.shape) * std).astype(dtype)
+    # fan-in scaled normal
+    fan_in = spec.shape[0] if len(spec.shape) >= 2 else max(spec.shape[0], 1)
+    if len(spec.shape) == 3:  # stacked experts: fan-in is dim 1
+        fan_in = spec.shape[1]
+    std = spec.scale if spec.scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, spec.shape) * std).astype(dtype)
+
+
+def init_params(specs, key, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_initializer(s, k, dtype) for s, k in zip(leaves, keys)]
+    )
+
+
+def abstract_params(specs, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs, is_leaf=_is_spec
+    )
+
+
+def logical_axes(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def stack_specs(spec_tree, n: int, axis_name: Optional[str] = "layer"):
+    """Prepend a stacking dimension (layer scan) to every spec in a tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.scale),
+        spec_tree,
+        is_leaf=_is_spec,
+    )
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+def rmsnorm_specs(d: int):
+    return {"scale": ParamSpec((d,), (None,), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm(x, eps: float = 1e-6, scale=None, bias=None):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                     # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    angles = angles[..., None, :]                                 # broadcast heads
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def embed_specs(vocab: int, d: int):
+    return {"embedding": ParamSpec((vocab, d), ("vocab", "embed"), init="embed")}
+
+
+def embed(params, tokens):
+    return params["embedding"][tokens]
+
+
+def unembed(params, x):
+    return x @ params["embedding"].T.astype(x.dtype)
+
+
+def dense_specs(d_in: int, d_out: int, in_ax: Optional[str], out_ax: Optional[str],
+                use_bias: bool = False, scale: Optional[float] = None):
+    s = {"kernel": ParamSpec((d_in, d_out), (in_ax, out_ax), scale=scale)}
+    if use_bias:
+        s["bias"] = ParamSpec((d_out,), (out_ax,), init="zeros")
+    return s
+
+
+def dense(params, x):
+    y = x @ params["kernel"].astype(x.dtype)
+    if "bias" in params:
+        y = y + params["bias"].astype(x.dtype)
+    return y

@@ -1,0 +1,295 @@
+"""Diffusion transformers — the paper's model family.
+
+Two denoisers:
+
+* ``dit_*`` — FLUX-like MMDiT: optional dual-stream (image+text) "double"
+  blocks followed by single-stream joint blocks, AdaLN-zero modulation,
+  rectified-flow velocity output.  ``dit_forward`` returns the Cumulative
+  Residual Feature (CRF) of the image stream next to the velocity, and
+  ``dit_from_crf`` maps a *predicted* CRF straight to a velocity — the
+  FreqCa skip path (everything but the final layer is bypassed).
+
+* ``backbone_*`` — wraps any assigned ``ModelConfig`` architecture
+  (dense/MoE/SSM/hybrid) as a continuous-latent denoiser: patchify +
+  time-conditioning around its residual stack.  This is how FreqCa is
+  exercised on the assigned architectures (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DiTConfig, ModelConfig
+from repro.models import attention, blocks, common
+from repro.models.common import ParamSpec
+
+
+class DenoiserOutput(NamedTuple):
+    velocity: jnp.ndarray      # [B, H, W, C]
+    crf: jnp.ndarray           # [B, S_img, d] image-stream CRF
+
+
+def timestep_embedding(t: jnp.ndarray, dim: int, max_period: float = 10000.0):
+    """t: [B] in [0, 1] -> [B, dim] sinusoidal features."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period)
+                    * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t.astype(jnp.float32)[:, None] * 1000.0 * freqs[None]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+def _pos_embedding(s: int, d: int):
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None]
+    angles = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], -1)
+
+
+def patchify(latents: jnp.ndarray, p: int):
+    b, h, w, c = latents.shape
+    x = latents.reshape(b, h // p, p, w // p, p, c)
+    return x.transpose(0, 1, 3, 2, 4, 5).reshape(b, (h // p) * (w // p),
+                                                 p * p * c)
+
+
+def unpatchify(tokens: jnp.ndarray, h: int, w: int, p: int, c: int):
+    b = tokens.shape[0]
+    x = tokens.reshape(b, h // p, w // p, p, p, c)
+    return x.transpose(0, 1, 3, 2, 4, 5).reshape(b, h, w, c)
+
+
+# ---------------------------------------------------------------------------
+# MMDiT blocks
+# ---------------------------------------------------------------------------
+
+def _attn_specs(d: int, n_heads: int):
+    hd = d // n_heads
+    return {
+        "wq": ParamSpec((d, n_heads, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, n_heads, hd), ("embed", "heads", "head_dim")),
+        "wv": ParamSpec((d, n_heads, hd), ("embed", "heads", "head_dim")),
+        "wo": ParamSpec((n_heads, hd, d), ("heads", "head_dim", "embed")),
+        "q_norm": ParamSpec((hd,), (None,), init="ones"),
+        "k_norm": ParamSpec((hd,), (None,), init="ones"),
+    }
+
+
+def _mlp_specs(d: int, f: int):
+    return {"wi": ParamSpec((d, f), ("embed", "ffn")),
+            "wo": ParamSpec((f, d), ("ffn", "embed"))}
+
+
+def _mod_specs(d: int, n: int):
+    return {"kernel": ParamSpec((d, n * d), ("embed", None), init="zeros"),
+            "bias": ParamSpec((n * d,), (None,), init="zeros")}
+
+
+def _modulation(params, cond, n: int):
+    """cond: [B, d] -> n chunks of [B, 1, d]."""
+    m = jax.nn.silu(cond) @ params["kernel"].astype(cond.dtype) \
+        + params["bias"].astype(cond.dtype)
+    return jnp.split(m[:, None, :], n, axis=-1)
+
+
+def _qkv_heads(p, x, n_heads):
+    b, s, d = x.shape
+    hd = d // n_heads
+    def norm(v, scale):
+        return common.layernorm(v, scale=scale)
+    q = norm((x @ p["wq"].astype(x.dtype).reshape(d, d)).reshape(b, s, n_heads, hd),
+             p["q_norm"])
+    k = norm((x @ p["wk"].astype(x.dtype).reshape(d, d)).reshape(b, s, n_heads, hd),
+             p["k_norm"])
+    v = (x @ p["wv"].astype(x.dtype).reshape(d, d)).reshape(b, s, n_heads, hd)
+    return q, k, v
+
+
+def _joint_attention(q, k, v, p_out, x_dtype):
+    b, s, nh, hd = q.shape
+    logits = jnp.einsum("bshk,bthk->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhst,bthk->bshk", probs, v)
+    return jnp.einsum("bshk,hkd->bsd", out, p_out.astype(x_dtype))
+
+
+def single_block_specs(cfg: DiTConfig):
+    return {"mod": _mod_specs(cfg.d_model, 6),
+            "attn": _attn_specs(cfg.d_model, cfg.n_heads),
+            "mlp": _mlp_specs(cfg.d_model, cfg.d_ff)}
+
+
+def single_block(params, x, cond, cfg: DiTConfig):
+    """Single-stream joint block with AdaLN-zero."""
+    sh1, sc1, g1, sh2, sc2, g2 = _modulation(params["mod"], cond, 6)
+    h = common.layernorm(x, cfg.norm_eps) * (1 + sc1) + sh1
+    q, k, v = _qkv_heads(params["attn"], h, cfg.n_heads)
+    x = x + g1 * _joint_attention(q, k, v, params["attn"]["wo"], x.dtype)
+    h = common.layernorm(x, cfg.norm_eps) * (1 + sc2) + sh2
+    y = jax.nn.gelu(h @ params["mlp"]["wi"].astype(x.dtype))
+    x = x + g2 * (y @ params["mlp"]["wo"].astype(x.dtype))
+    return x
+
+
+def double_block_specs(cfg: DiTConfig):
+    return {"img": single_block_specs(cfg), "txt": single_block_specs(cfg)}
+
+
+def double_block(params, img, txt, cond, cfg: DiTConfig):
+    """Dual-stream MMDiT block: separate params, joint attention."""
+    outs = {}
+    streams = {"img": img, "txt": txt}
+    qkvs = {}
+    mods = {}
+    for name in ("img", "txt"):
+        p = params[name]
+        mods[name] = _modulation(p["mod"], cond, 6)
+        sh1, sc1 = mods[name][0], mods[name][1]
+        h = common.layernorm(streams[name], cfg.norm_eps) * (1 + sc1) + sh1
+        qkvs[name] = _qkv_heads(p["attn"], h, cfg.n_heads)
+    s_txt = txt.shape[1]
+    q = jnp.concatenate([qkvs["txt"][0], qkvs["img"][0]], axis=1)
+    k = jnp.concatenate([qkvs["txt"][1], qkvs["img"][1]], axis=1)
+    v = jnp.concatenate([qkvs["txt"][2], qkvs["img"][2]], axis=1)
+    for name in ("img", "txt"):
+        p = params[name]
+        _, _, g1, sh2, sc2, g2 = mods[name]
+        attn_out = _joint_attention(q, k, v, p["attn"]["wo"], img.dtype)
+        part = attn_out[:, s_txt:] if name == "img" else attn_out[:, :s_txt]
+        x = streams[name] + g1 * part
+        h = common.layernorm(x, cfg.norm_eps) * (1 + sc2) + sh2
+        y = jax.nn.gelu(h @ p["mlp"]["wi"].astype(x.dtype))
+        outs[name] = x + g2 * (y @ p["mlp"]["wo"].astype(x.dtype))
+    return outs["img"], outs["txt"]
+
+
+def dit_specs(cfg: DiTConfig):
+    pdim = cfg.patch_size * cfg.patch_size * cfg.in_channels
+    s: Dict[str, Any] = {
+        "patch_proj": common.dense_specs(pdim, cfg.d_model, None, "embed",
+                                         use_bias=True),
+        "time_mlp1": common.dense_specs(cfg.time_embed_dim, cfg.d_model,
+                                        None, "embed", use_bias=True),
+        "time_mlp2": common.dense_specs(cfg.d_model, cfg.d_model,
+                                        "embed", None, use_bias=True),
+        "single": common.stack_specs(single_block_specs(cfg), cfg.n_layers),
+        "final_mod": _mod_specs(cfg.d_model, 2),
+        "final_proj": ParamSpec((cfg.d_model, pdim), ("embed", None),
+                                init="zeros"),
+    }
+    if cfg.n_double > 0:
+        s["double"] = common.stack_specs(double_block_specs(cfg), cfg.n_double)
+    if cfg.text_dim > 0:
+        s["text_proj"] = common.dense_specs(cfg.text_dim, cfg.d_model, None,
+                                            "embed", use_bias=True)
+    return s
+
+
+def _time_cond(params, t, cfg: DiTConfig, dtype):
+    emb = timestep_embedding(t, cfg.time_embed_dim).astype(dtype)
+    h = jax.nn.silu(common.dense(params["time_mlp1"], emb))
+    return common.dense(params["time_mlp2"], h)
+
+
+def dit_forward(params, latents: jnp.ndarray, t: jnp.ndarray,
+                cfg: DiTConfig,
+                text_embeds: Optional[jnp.ndarray] = None) -> DenoiserOutput:
+    """latents: [B,H,W,C]; t: [B] in [0,1]; text_embeds: [B,T,text_dim]."""
+    b, h, w, c = latents.shape
+    dtype = jnp.dtype(cfg.dtype)
+    x = patchify(latents.astype(dtype), cfg.patch_size)
+    x = common.dense(params["patch_proj"], x)
+    s_img = x.shape[1]
+    x = x + _pos_embedding(s_img, cfg.d_model).astype(dtype)[None]
+    cond = _time_cond(params, t, cfg, dtype)
+
+    txt = None
+    if cfg.text_dim > 0 and text_embeds is not None:
+        txt = common.dense(params["text_proj"], text_embeds.astype(dtype))
+
+    if cfg.n_double > 0 and txt is not None:
+        def dbody(carry, layer_params):
+            img_h, txt_h = carry
+            img_h, txt_h = double_block(layer_params, img_h, txt_h,
+                                        cond[:, 0] if cond.ndim == 3 else cond,
+                                        cfg)
+            return (img_h, txt_h), ()
+        (x, txt), _ = jax.lax.scan(dbody, (x, txt), params["double"])
+
+    if txt is not None:
+        s_txt = txt.shape[1]
+        x = jnp.concatenate([txt, x], axis=1)
+    else:
+        s_txt = 0
+
+    def sbody(h_tok, layer_params):
+        return single_block(layer_params, h_tok, cond, cfg), ()
+
+    x, _ = jax.lax.scan(sbody, x, params["single"])
+    crf = x[:, s_txt:]
+    velocity = _final_layer(params, crf, cond, cfg, h, w)
+    return DenoiserOutput(velocity=velocity, crf=crf)
+
+
+def _final_layer(params, crf, cond, cfg: DiTConfig, h: int, w: int):
+    sh, sc = _modulation(params["final_mod"], cond, 2)
+    y = common.layernorm(crf, cfg.norm_eps) * (1 + sc) + sh
+    y = y @ params["final_proj"].astype(crf.dtype)
+    return unpatchify(y, h, w, cfg.patch_size, cfg.in_channels)
+
+
+def dit_from_crf(params, crf: jnp.ndarray, t: jnp.ndarray, cfg: DiTConfig,
+                 h: int, w: int) -> jnp.ndarray:
+    """FreqCa skip path: predicted CRF -> velocity (final layer only)."""
+    cond = _time_cond(params, t, cfg, crf.dtype)
+    return _final_layer(params, crf, cond, cfg, h, w)
+
+
+# ---------------------------------------------------------------------------
+# assigned-architecture backbones as denoisers
+# ---------------------------------------------------------------------------
+
+def backbone_denoiser_specs(cfg: ModelConfig, patch_size: int = 2,
+                            in_channels: int = 4, time_dim: int = 256):
+    pdim = patch_size * patch_size * in_channels
+    return {
+        "patch_proj": common.dense_specs(pdim, cfg.d_model, None, "embed",
+                                         use_bias=True),
+        "time_mlp1": common.dense_specs(time_dim, cfg.d_model, None, "embed",
+                                        use_bias=True),
+        "time_mlp2": common.dense_specs(cfg.d_model, cfg.d_model, "embed",
+                                        None, use_bias=True),
+        "stack": blocks.stack_specs(cfg),
+        "final_norm": common.rmsnorm_specs(cfg.d_model),
+        "final_proj": ParamSpec((cfg.d_model, pdim), ("embed", None),
+                                init="zeros"),
+    }
+
+
+def backbone_denoiser_forward(params, latents, t, cfg: ModelConfig,
+                              patch_size: int = 2, time_dim: int = 256
+                              ) -> DenoiserOutput:
+    b, hh, ww, c = latents.shape
+    dtype = jnp.dtype(cfg.dtype)
+    x = patchify(latents.astype(dtype), patch_size)
+    x = common.dense(params["patch_proj"], x)
+    x = x + _pos_embedding(x.shape[1], cfg.d_model).astype(dtype)[None]
+    emb = timestep_embedding(t, time_dim).astype(dtype)
+    temb = common.dense(params["time_mlp2"],
+                        jax.nn.silu(common.dense(params["time_mlp1"], emb)))
+    x = x + temb[:, None, :]
+    h, _ = blocks.stack_full(params["stack"], x, cfg, causal=False)
+    y = common.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    y = y @ params["final_proj"].astype(y.dtype)
+    velocity = unpatchify(y, hh, ww, patch_size, c)
+    return DenoiserOutput(velocity=velocity, crf=h)
+
+
+def backbone_denoiser_from_crf(params, crf, cfg: ModelConfig, h: int, w: int,
+                               patch_size: int = 2, in_channels: int = 4):
+    y = common.rmsnorm(params["final_norm"], crf, cfg.norm_eps)
+    y = y @ params["final_proj"].astype(y.dtype)
+    return unpatchify(y, h, w, patch_size, in_channels)

@@ -1,0 +1,31 @@
+"""SwiGLU feed-forward block."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec
+
+
+def mlp_specs(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wi_gate": ParamSpec((d, f), ("embed", "ffn")),
+        "wi_up": ParamSpec((d, f), ("embed", "ffn")),
+        "wo": ParamSpec((f, d), ("ffn", "embed")),
+    }
+
+
+def mlp(params, x, constrain_ffn=None):
+    """``constrain_ffn`` pins the [B, S, d_ff] hidden to the TP layout —
+    under sequence parallelism GSPMD otherwise keeps S-sharding through
+    the FFN, which turns every weight gradient into a full-size f32
+    partial + all-reduce (Megatron-SP switches to TP inside the block
+    and back to SP at the boundary; this hook is that switch)."""
+    gate = jax.nn.silu(x @ params["wi_gate"].astype(x.dtype))
+    up = x @ params["wi_up"].astype(x.dtype)
+    h = gate * up
+    if constrain_ffn is not None:
+        h = constrain_ffn(h)
+    return h @ params["wo"].astype(x.dtype)

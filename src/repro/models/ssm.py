@@ -1,0 +1,192 @@
+"""Mamba2 (SSD — state-space duality) block.
+
+Training/prefill uses the chunked SSD form [arXiv:2405.21060]: quadratic
+attention-like compute inside fixed-size chunks (MXU-friendly matmuls) and
+a `lax.scan` over chunk states for the linear recurrence — sequential only
+in the chunk dimension, parallel in (batch, heads).  Decode uses the O(1)
+recurrent state update.  Heads are sharded on the "model" mesh axis; the
+scan carries no cross-device state, so the recurrence adds no collectives.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import common
+from repro.models.common import ParamSpec
+
+
+def _dims(cfg: ModelConfig):
+    ssm = cfg.ssm or SSMConfig()
+    d_inner = ssm.expand * cfg.d_model
+    n_heads = d_inner // ssm.head_dim
+    conv_dim = d_inner + 2 * ssm.d_state
+    return ssm, d_inner, n_heads, conv_dim
+
+
+def ssm_specs(cfg: ModelConfig):
+    ssm, d_inner, n_heads, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    return {
+        # projects to [z (gate), x, B, C, dt]
+        "in_proj": ParamSpec(
+            (d, 2 * d_inner + 2 * ssm.d_state + n_heads), ("embed", "inner")),
+        "conv_kernel": ParamSpec((ssm.conv_width, conv_dim), (None, "inner"),
+                                 scale=0.1),
+        "conv_bias": ParamSpec((conv_dim,), ("inner",), init="zeros"),
+        "A_log": ParamSpec((n_heads,), ("ssm_heads",), init="zeros"),
+        "dt_bias": ParamSpec((n_heads,), ("ssm_heads",), init="zeros"),
+        "D": ParamSpec((n_heads,), ("ssm_heads",), init="ones"),
+        "norm_scale": ParamSpec((d_inner,), ("inner",), init="ones"),
+        "out_proj": ParamSpec((d_inner, d), ("inner", "embed")),
+    }
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray    # [B, conv_width-1, conv_dim] — last inputs
+    state: jnp.ndarray   # [B, H, P, N] recurrent state
+
+    @classmethod
+    def zeros(cls, batch, cfg: ModelConfig, dtype):
+        ssm, d_inner, n_heads, conv_dim = _dims(cfg)
+        return cls(
+            conv=jnp.zeros((batch, ssm.conv_width - 1, conv_dim), dtype),
+            state=jnp.zeros((batch, n_heads, ssm.head_dim, ssm.d_state),
+                            jnp.float32),
+        )
+
+    @classmethod
+    def abstract(cls, batch, cfg: ModelConfig, dtype):
+        ssm, d_inner, n_heads, conv_dim = _dims(cfg)
+        return cls(
+            conv=jax.ShapeDtypeStruct((batch, ssm.conv_width - 1, conv_dim),
+                                      dtype),
+            state=jax.ShapeDtypeStruct(
+                (batch, n_heads, ssm.head_dim, ssm.d_state), jnp.float32),
+        )
+
+
+def _split_proj(params, x, cfg: ModelConfig):
+    ssm, d_inner, n_heads, _ = _dims(cfg)
+    proj = x @ params["in_proj"].astype(x.dtype)
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_inner + 2 * ssm.d_state], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(params, xbc, cfg: ModelConfig, prefix=None):
+    """Depthwise causal conv over [B, S, C]; prefix = [B, W-1, C] history."""
+    ssm = cfg.ssm or SSMConfig()
+    w = ssm.conv_width
+    if prefix is None:
+        prefix = jnp.zeros((xbc.shape[0], w - 1, xbc.shape[-1]), xbc.dtype)
+    xp = jnp.concatenate([prefix, xbc], axis=1)
+    kernel = params["conv_kernel"].astype(xbc.dtype)
+    out = sum(xp[:, i:i + xbc.shape[1], :] * kernel[i] for i in range(w))
+    out = out + params["conv_bias"].astype(xbc.dtype)
+    return jax.nn.silu(out), xp[:, -(w - 1):, :]
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD scan.
+
+    x: [b, s, h, p]; dt: [b, s, h] (>=0); A: [h] (negative); B, C:
+    [b, s, n].  Returns y: [b, s, h, p] and final state [b, h, p, n].
+
+    The whole per-chunk computation (including the [q, q, h] intra-chunk
+    decay) lives INSIDE the scan body, so peak memory is O(b·q²·h) for
+    one chunk — materialising it for all chunks at once is what blew a
+    Jamba-scale dry-run past 500 GB/device.
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    f32 = jnp.float32
+
+    xc = jnp.moveaxis(x.astype(f32).reshape(b, nc, q, h, p), 1, 0)
+    dtc = jnp.moveaxis(dt.astype(f32).reshape(b, nc, q, h), 1, 0)
+    Bc = jnp.moveaxis(B.astype(f32).reshape(b, nc, q, n), 1, 0)
+    Cc = jnp.moveaxis(C.astype(f32).reshape(b, nc, q, n), 1, 0)
+    A = A.astype(f32)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+
+    # remat: the [b,q,q,h] intra-chunk decay matrix is needed by the
+    # backward of the einsums — without checkpointing the scan saves it
+    # for EVERY chunk (Jamba-scale: ~0.5 TB/device); recompute instead.
+    @jax.checkpoint
+    def step(state, inp):
+        x_k, dt_k, B_k, C_k = inp                 # [b,q,...] one chunk
+        dA_cum = jnp.cumsum(dt_k * A, axis=1)     # [b, q, h]
+        # intra-chunk: L[i,j] = exp(cum_i - cum_j), j <= i
+        diff = dA_cum[:, :, None, :] - dA_cum[:, None, :, :]   # [b,q,q,h]
+        L = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", C_k, B_k)              # [b,q,q]
+        y = jnp.einsum("bij,bijh,bjh,bjhp->bihp", cb, L, dt_k, x_k)
+        # carried-state contribution
+        y += jnp.einsum("bin,bhpn,bih->bihp", C_k, state, jnp.exp(dA_cum))
+        # state update
+        decay_out = jnp.exp(dA_cum[:, -1:, :] - dA_cum)        # [b,q,h]
+        st_new = jnp.einsum("bjh,bjn,bjhp->bhpn",
+                            dt_k * decay_out, B_k, x_k)
+        state = state * jnp.exp(dA_cum[:, -1, :])[:, :, None, None] + st_new
+        return state, y
+
+    init = jnp.zeros((b, h, p, n), f32)
+    final_state, ys = jax.lax.scan(step, init, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_recurrent_step(x, dt, A, B, C, state):
+    """Single-token recurrence.  x:[b,h,p] dt:[b,h] B,C:[b,n] state:[b,h,p,n]."""
+    f32 = jnp.float32
+    x, dt, B, C = (t.astype(f32) for t in (x, dt, B, C))
+    dA = jnp.exp(dt * A.astype(f32))                             # [b, h]
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt, B, x)
+    state = state * dA[:, :, None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", state, C)
+    return y, state
+
+
+def ssm_block(params, x, cfg: ModelConfig):
+    """Full-sequence Mamba2 mixer. x: [B, S, d] -> [B, S, d]."""
+    ssm, d_inner, n_heads, _ = _dims(cfg)
+    b, s, _ = x.shape
+    z, xbc, dt = _split_proj(params, x, cfg)
+    xbc, _ = _causal_conv(params, xbc, cfg)
+    xs, B, C = jnp.split(xbc, [d_inner, d_inner + ssm.d_state], axis=-1)
+    xs = xs.reshape(b, s, n_heads, ssm.head_dim)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    y, _ = ssd_chunked(xs, dt, A, B, C, ssm.chunk)
+    y = y + xs * params["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(b, s, d_inner)
+    y = common.rmsnorm({"scale": params["norm_scale"]}, y * jax.nn.silu(z),
+                       cfg.norm_eps)
+    return y @ params["out_proj"].astype(x.dtype)
+
+
+def ssm_decode_step(params, x, cfg: ModelConfig, cache: SSMCache):
+    """One-token decode. x: [B, 1, d] -> ([B, 1, d], SSMCache)."""
+    ssm, d_inner, n_heads, conv_dim = _dims(cfg)
+    b = x.shape[0]
+    z, xbc, dt = _split_proj(params, x, cfg)
+    xbc, conv_state = _causal_conv(params, xbc, cfg, prefix=cache.conv)
+    xs, B, C = jnp.split(xbc[:, 0], [d_inner, d_inner + ssm.d_state], axis=-1)
+    xs = xs.reshape(b, n_heads, ssm.head_dim)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + params["dt_bias"].astype(jnp.float32))
+    y, state = ssd_recurrent_step(xs, dtv, A, B, C, cache.state)
+    y = y.astype(x.dtype) + xs * params["D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(b, 1, d_inner)
+    y = common.rmsnorm({"scale": params["norm_scale"]},
+                       y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["out_proj"].astype(x.dtype)
+    return out, SSMCache(conv=conv_state, state=state)

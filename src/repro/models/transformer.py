@@ -1,0 +1,143 @@
+"""Causal language model: embed -> block stack -> norm -> head.
+
+Also the VLM variant: precomputed vision-frontend patch embeddings (the
+assignment's stub carve-out) are projected and prepended to the token
+embeddings; loss is computed on text positions only.
+
+``forward`` returns the Cumulative Residual Feature (CRF) next to the
+logits — the final pre-norm hidden state, which per the paper equals the
+input embedding plus the sum of every residual update.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks, common
+from repro.models.common import ParamSpec
+
+
+class LMOutput(NamedTuple):
+    logits: jnp.ndarray
+    crf: jnp.ndarray
+    aux: blocks.BlockAux
+
+
+def lm_specs(cfg: ModelConfig):
+    s: Dict[str, Any] = {
+        "embed": common.embed_specs(cfg.vocab_size, cfg.d_model),
+        "stack": blocks.stack_specs(cfg),
+        "final_norm": common.rmsnorm_specs(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        s["head"] = {"kernel": ParamSpec((cfg.d_model, cfg.vocab_size),
+                                         ("embed", "vocab"), scale=0.02)}
+    if cfg.n_prefix_tokens > 0:
+        # projection of (stubbed) modality-frontend embeddings into d_model
+        s["prefix_proj"] = common.dense_specs(cfg.d_model, cfg.d_model,
+                                              "embed", None)
+    return s
+
+
+def _head(params, h, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return common.unembed(params["embed"], h)
+    return h @ params["head"]["kernel"].astype(h.dtype)
+
+
+def forward(params, tokens: jnp.ndarray, cfg: ModelConfig,
+            prefix_embeds: Optional[jnp.ndarray] = None,
+            window: int = 0, remat: Optional[bool] = None,
+            constrain=None) -> LMOutput:
+    """tokens: [B, S_text]; prefix_embeds: [B, P, d_model] or None."""
+    x = common.embed(params["embed"], tokens)
+    dtype = jnp.dtype(cfg.dtype)
+    x = x.astype(dtype)
+    if prefix_embeds is not None:
+        pe = common.dense(params["prefix_proj"], prefix_embeds.astype(dtype))
+        x = jnp.concatenate([pe, x], axis=1)
+    h, aux = blocks.stack_full(params["stack"], x, cfg, window=window,
+                               remat=remat, constrain=constrain)
+    logits = _head(params, common.rmsnorm(params["final_norm"], h,
+                                          cfg.norm_eps), cfg)
+    return LMOutput(logits=logits, crf=h, aux=aux)
+
+
+def _embedding_matrix(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]["embedding"].T
+    return params["head"]["kernel"]
+
+
+def chunked_cross_entropy(params, h: jnp.ndarray, labels: jnp.ndarray,
+                          cfg: ModelConfig, chunk: int = 512):
+    """Sequence-chunked CE so [B, S, vocab] logits never materialise.
+
+    h: final-normed hidden [B, S, d]; labels [B, S] with -1 = masked.
+    The chunk body is rematerialised on backward (logits recomputed).
+    """
+    b, s, d = h.shape
+    c = min(chunk, s)
+    while s % c:          # largest divisor of s at most `chunk`
+        c -= 1
+    n = s // c
+    hr = jnp.moveaxis(h.reshape(b, n, c, d), 1, 0)
+    lr = jnp.moveaxis(labels.reshape(b, n, c), 1, 0)
+    w = _embedding_matrix(params, cfg)
+
+    @jax.checkpoint
+    def step(carry, inp):
+        tot, cnt = carry
+        hc, lc = inp
+        logits = (hc @ w.astype(hc.dtype)).astype(jnp.float32)
+        valid = lc >= 0
+        lc = jnp.maximum(lc, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = logz - gold
+        return (tot + jnp.sum(nll * valid), cnt + jnp.sum(valid)), ()
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.int32)), (hr, lr))
+    return tot / jnp.maximum(cnt, 1)
+
+
+def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            constrain=None, constrain_ffn=None, constrain_heads=None):
+    """Next-token cross-entropy; label -1 positions are masked out."""
+    x = common.embed(params["embed"], batch["tokens"])
+    dtype = jnp.dtype(cfg.dtype)
+    x = x.astype(dtype)
+    if cfg.n_prefix_tokens > 0:
+        pe = common.dense(params["prefix_proj"],
+                          batch["prefix_embeds"].astype(dtype))
+        x = jnp.concatenate([pe, x], axis=1)
+    h, out_aux = blocks.stack_full(params["stack"], x, cfg,
+                                   constrain=constrain,
+                                   constrain_ffn=constrain_ffn,
+                                   constrain_heads=constrain_heads)
+    if cfg.n_prefix_tokens > 0:
+        h = h[:, cfg.n_prefix_tokens:]
+    hn = common.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    loss = chunked_cross_entropy(params, hn, batch["labels"], cfg)
+    out = LMOutput(logits=None, crf=h, aux=out_aux)
+    if cfg.moe is not None:
+        loss = (loss + cfg.moe.aux_loss_weight * out.aux.load_balance_loss
+                + cfg.moe.router_z_weight * out.aux.router_z_loss)
+    metrics = {"loss": loss, "lb_loss": out.aux.load_balance_loss,
+               "drop_fraction": out.aux.drop_fraction}
+    return loss, metrics
+
+
+def decode_step(params, tokens: jnp.ndarray, cache, cfg: ModelConfig,
+                window: int = 0):
+    """tokens: [B, 1] -> (logits [B, 1, V], new_cache)."""
+    x = common.embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    h, new_cache, _ = blocks.stack_decode(params["stack"], x, cfg, cache,
+                                          window=window)
+    logits = _head(params, common.rmsnorm(params["final_norm"], h,
+                                          cfg.norm_eps), cfg)
+    return logits, new_cache

@@ -1,0 +1,142 @@
+"""Roofline terms from compiled dry-run artifacts (no real TPU).
+
+compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+memory term     = HLO_bytes / (chips x HBM_bw)
+collective term = collective_bytes / (chips x link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.
+collective_bytes are parsed out of the post-SPMD optimized HLO text
+(``compiled.as_text()``): we sum the *operand* sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, scaling ops that live inside ``while`` loop bodies
+by the loop trip count when it is statically recoverable from the scan
+length.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+# TPU v5e hardware constants (per assignment)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[128,256]' -> byte count (0 for unparseable/tuple parts)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_COLL_OP_RE = re.compile(
+    r"=\s*(?P<shape>\(?[\w\[\],{}: ]*?\)?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<variant>-start|-done)?\(")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    """Map computation name -> body text (brace-balanced blocks)."""
+    comps: Dict[str, str] = {}
+    name, depth, buf = None, 0, []
+    for line in hlo_text.splitlines():
+        if name is None:
+            m = re.match(r"\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$", line)
+            if m and "->" in line:
+                name, depth, buf = m.group(1), 1, [line]
+            continue
+        buf.append(line)
+        depth += line.count("{") - line.count("}")
+        if depth <= 0:
+            comps[name] = "\n".join(buf)
+            name = None
+    return comps
+
+
+def _trip_count_of_cond(cond_text: str) -> int:
+    """Largest s32/u32 constant in a while condition ~ trip count."""
+    best = 1
+    for m in re.finditer(r"[su]32\[\]\s+constant\((\d+)\)", cond_text):
+        best = max(best, int(m.group(1)))
+    return best
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of collective ops in optimized HLO.
+
+    Collectives inside while-loop bodies (layer scans, flash-attention
+    scans) are scaled by the loop trip count, recovered from the integer
+    bound in the loop condition (XLA keeps scan lengths as constants
+    there).  Async pairs are counted once (at the ``-done`` op).
+    """
+    comps = _split_computations(hlo_text)
+    # trip count per body computation
+    trips: Dict[str, int] = {}
+    for cname, ctext in comps.items():
+        for m in re.finditer(
+                r"while\(.*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)",
+                ctext):
+            cond, body = m.group(1), m.group(2)
+            trips[body] = _trip_count_of_cond(comps.get(cond, ""))
+
+    totals: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for cname, ctext in comps.items():
+        mult = trips.get(cname, 1)
+        for m in _COLL_OP_RE.finditer(ctext):
+            if m.group("variant") == "-start":
+                continue  # counted at -done
+            nbytes = _shape_bytes(m.group("shape"))
+            totals[m.group("op")] += nbytes * mult
+            counts[m.group("op")] += 1
+    out: Dict[str, float] = {k: v for k, v in totals.items() if v}
+    out["total_bytes"] = float(sum(totals.values()))
+    out["op_counts"] = {k: v for k, v in counts.items() if v}
+    return out
+
+
+def memory_dict(mem) -> Dict[str, float]:
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        if hasattr(mem, attr):
+            out[attr.replace("_in_bytes", "_bytes")] = int(getattr(mem, attr))
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_bytes: float, n_chips: int) -> Dict[str, float]:
+    compute_t = flops / (n_chips * PEAK_FLOPS)
+    memory_t = bytes_accessed / (n_chips * HBM_BW)
+    coll_t = coll_bytes / (n_chips * LINK_BW)
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": coll_t}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k])
+    return terms
+
+
+def model_flops(n_params_active: float, n_tokens: float,
+                train: bool) -> float:
+    """6·N·D for train (fwd+bwd), 2·N·D for inference."""
+    per_tok = 6.0 if train else 2.0
+    return per_tok * n_params_active * n_tokens

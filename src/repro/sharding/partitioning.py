@@ -1,0 +1,172 @@
+"""Logical-axis -> mesh-axis rules and NamedSharding derivation.
+
+Every parameter/cache dim carries a logical axis name (see ParamSpec).
+Rules map those names to mesh axes, with divisibility-aware fallbacks:
+
+* tensor parallelism ("model"): ffn / experts / heads; when a head count
+  does not divide the 16-way model axis (GQA kv=8, 56-head archs) the
+  *head_dim* is sharded instead — the TPU-friendly fallback (DESIGN.md §5).
+* FSDP ("data", + "pod" when present): the "embed" dim of weights, so
+  >=100B configs fit HBM; GSPMD turns this into per-layer all-gathers.
+* batch dims shard over ("pod","data"); the long_500k single-request
+  decode shards the KV-cache *length* instead.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import DiTConfig, ModelConfig
+
+Rules = Dict[str, Union[None, str, Tuple[str, ...]]]
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return mesh.shape[name]
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def model_rules(cfg: ModelConfig, mesh: Mesh, mode: str,
+                serve_tp_bytes: float = 4e9,
+                shape_kind: str = "train") -> Rules:
+    """mode: 'train' (FSDP+TP) or 'serve' (2D weights + TP).
+
+    ``serve_tp_bytes``: weights above this many bytes per TP shard are
+    additionally sharded over the data axis (gathered per layer at
+    serve time) — below it they stay TP-resident.
+
+    ``shape_kind``: head_dim sharding (the fallback when a head count
+    does not divide the TP axis) is applied ONLY for decode — at
+    full-sequence shapes a head_dim-sharded contraction puts an
+    all-reduce of the attention logits inside every blockwise tile
+    (measured: 30 TB/device on deepseek prefill_32k, §Perf B).
+    Full-sequence shapes rely on sequence parallelism instead.
+    """
+    msz = mesh.shape["model"]
+    dp = dp_axes(mesh)
+    dpsz = _axis_size(mesh, dp)
+    rules: Rules = {
+        "layer": None, "heads": None, "head_dim": None, "kv_heads": None,
+        "kv_head_dim": None, "ffn": None, "expert": None, "vocab": None,
+        "embed": None, "inner": None, "ssm_heads": None,
+    }
+    # --- tensor parallel placements ---
+    if _div(cfg.d_ff, msz):
+        rules["ffn"] = "model"
+    if cfg.moe is not None and cfg.moe.n_experts > 0:
+        if _div(cfg.moe.e_total, msz):
+            rules["expert"] = "model"
+            rules["ffn"] = None          # experts already split the FFN
+    if _div(cfg.n_heads, msz):
+        rules["heads"] = "model"
+    elif _div(cfg.head_dim, msz) and shape_kind == "decode":
+        rules["head_dim"] = "model"
+    if _div(cfg.n_kv_heads, msz):
+        rules["kv_heads"] = "model"
+    elif _div(cfg.head_dim, msz) and shape_kind == "decode":
+        rules["kv_head_dim"] = "model"
+    if _div(cfg.vocab_size, msz):
+        rules["vocab"] = "model"
+    if cfg.ssm is not None:
+        d_inner = cfg.d_inner
+        proj_out = 2 * d_inner + 2 * cfg.ssm.d_state + cfg.n_ssm_heads
+        conv_dim = d_inner + 2 * cfg.ssm.d_state
+        if all(_div(n, msz) for n in (d_inner, proj_out, conv_dim)):
+            rules["inner"] = "model"
+        if _div(cfg.n_ssm_heads, msz):
+            rules["ssm_heads"] = "model"
+    # --- data-axis weight sharding (FSDP / 2D serve weights) ---
+    big = param_bytes(cfg) / msz > serve_tp_bytes
+    if mode == "train" or big:
+        if _div(cfg.d_model, dpsz):
+            rules["embed"] = dp
+    return rules
+
+
+def dit_rules(cfg: DiTConfig, mesh: Mesh) -> Rules:
+    msz = mesh.shape["model"]
+    rules: Rules = {"layer": None, "embed": None, "vocab": None,
+                    "heads": None, "head_dim": None, "ffn": None}
+    if _div(cfg.d_ff, msz):
+        rules["ffn"] = "model"
+    if _div(cfg.n_heads, msz):
+        rules["heads"] = "model"
+    elif _div(cfg.head_dim, msz):
+        rules["head_dim"] = "model"
+    return rules
+
+
+def param_bytes(cfg: ModelConfig, bytes_per: int = 2) -> int:
+    """Analytic total parameter bytes (no allocation)."""
+    from repro.models import common as C
+    if cfg.is_encdec:
+        from repro.models import encdec
+        specs = encdec.encdec_specs(cfg)
+    else:
+        from repro.models import transformer
+        specs = transformer.lm_specs(cfg)
+    leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, C.ParamSpec))
+    return sum(int(np.prod(s.shape)) * bytes_per for s in leaves)
+
+
+def spec_for_axes(axes: Tuple[Optional[str], ...], rules: Rules) -> P:
+    entries = []
+    for name in axes:
+        if name is None:
+            entries.append(None)
+        else:
+            entries.append(rules.get(name))
+    return P(*entries)
+
+
+def shardings_for_specs(spec_tree, rules: Rules, mesh: Mesh):
+    """ParamSpec tree -> NamedSharding tree."""
+    from repro.models.common import ParamSpec
+
+    def one(s: ParamSpec):
+        pspec = spec_for_axes(s.axes, rules)
+        # drop mesh axes that don't divide the dim (uneven shard guard)
+        fixed = []
+        for dim, entry in zip(s.shape, pspec):
+            if entry is None:
+                fixed.append(None)
+            elif _div(dim, _axis_size(mesh, entry)):
+                fixed.append(entry)
+            else:
+                fixed.append(None)
+        return NamedSharding(mesh, P(*fixed))
+
+    return jax.tree.map(one, spec_tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def batch_spec(mesh: Mesh, global_batch: int, ndim: int,
+               extra: Tuple = ()) -> NamedSharding:
+    dp = dp_axes(mesh)
+    if not _div(global_batch, _axis_size(mesh, dp)):
+        dp = ("data",) if _div(global_batch, mesh.shape["data"]) else None
+    entries = [dp] + [None] * (ndim - 1)
+    for i, e in enumerate(extra):
+        entries[1 + i] = e
+    return NamedSharding(mesh, P(*entries))
+
+
+def constraint(x, mesh: Mesh, *entries):
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))

@@ -1,0 +1,10 @@
+import os
+
+# Tests run on the single real CPU device; integration tests that need a
+# small host-device mesh live in tests/test_dryrun_mesh.py which spawns a
+# subprocess with its own XLA_FLAGS (never set the 512-device flag here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

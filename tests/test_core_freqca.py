@@ -1,0 +1,199 @@
+"""Unit + property tests for the paper's core: frequency decomposition,
+Hermite prediction, CRF caching, and the policy state machines."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import cache as cache_lib
+from repro.core import frequency, hermite
+from repro.core.cache import CachePolicy
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# frequency decomposition
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from(["fft", "dct"]),
+       st.integers(min_value=4, max_value=64),
+       st.floats(min_value=0.02, max_value=0.9),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_band_partition(method, s, rho, seed):
+    """low + high == z exactly (the split is a partition) — paper eq. 1."""
+    z = jax.random.normal(jax.random.key(seed), (2, s, 8))
+    b = frequency.decompose(z, rho, method)
+    np.testing.assert_allclose(np.asarray(b.low + b.high), np.asarray(z),
+                               atol=1e-5)
+
+
+@given(st.sampled_from(["fft", "dct"]),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_band_orthogonality(method, seed):
+    """Low/high bands are orthogonal (Parseval: energies add up)."""
+    z = jax.random.normal(jax.random.key(seed), (1, 32, 4))
+    b = frequency.decompose(z, 0.25, method)
+    e_low = float(jnp.sum(b.low.astype(jnp.float32) ** 2))
+    e_high = float(jnp.sum(b.high.astype(jnp.float32) ** 2))
+    e_tot = float(jnp.sum(z.astype(jnp.float32) ** 2))
+    assert abs(e_low + e_high - e_tot) / e_tot < 1e-4
+
+
+def test_constant_signal_is_all_low():
+    z = jnp.ones((1, 32, 4)) * 3.0
+    for method in ("fft", "dct"):
+        b = frequency.decompose(z, 0.1, method)
+        assert float(jnp.abs(b.high).max()) < 1e-5, method
+
+
+def test_nyquist_signal_is_all_high():
+    s = 32
+    alt = jnp.tile(jnp.array([1.0, -1.0]), s // 2)[None, :, None]
+    # FFT: the alternating signal is exactly the Nyquist bin -> zero low
+    b = frequency.decompose(alt, 0.1, "fft")
+    assert float(jnp.abs(b.low).max()) < 1e-4
+    # DCT-II: it is *almost* the top basis vector (phase taper leaks a
+    # little); low-band energy must still be tiny
+    b = frequency.decompose(alt, 0.1, "dct")
+    e_low = float(jnp.sum(b.low ** 2))
+    e_tot = float(jnp.sum(alt ** 2))
+    assert e_low / e_tot < 0.02
+
+
+def test_decompose_idempotent():
+    """Low band of the low band is the low band (projection)."""
+    z = jax.random.normal(jax.random.key(0), (1, 64, 8))
+    b = frequency.decompose(z, 0.25, "dct")
+    b2 = frequency.decompose(b.low, 0.25, "dct")
+    np.testing.assert_allclose(np.asarray(b2.low), np.asarray(b.low),
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Hermite predictor
+# ---------------------------------------------------------------------------
+
+@given(st.integers(min_value=0, max_value=2),
+       st.floats(min_value=-2, max_value=2),
+       st.floats(min_value=-2, max_value=2),
+       st.floats(min_value=-2, max_value=2))
+def test_hermite_exact_on_polynomials(order, c0, c1, c2):
+    """With K = order+1 points the fit reproduces any degree<=order poly."""
+    coeffs = [c0, c1, c2][: order + 1]
+
+    def poly(t):
+        return sum(c * t ** i for i, c in enumerate(coeffs))
+
+    ts = jnp.array([1.0, 0.8, 0.6][: order + 1])
+    vals = jnp.stack([jnp.full((3, 3), poly(float(t))) for t in ts])
+    pred = hermite.predict(ts, vals, 0.4, order=order)
+    np.testing.assert_allclose(np.asarray(pred), poly(0.4), atol=5e-3)
+
+
+def test_hermite_basis_recurrence():
+    s = jnp.linspace(-1, 1, 7)
+    b = hermite.hermite_basis(s, 3)
+    np.testing.assert_allclose(np.asarray(b[:, 0]), 1.0)
+    np.testing.assert_allclose(np.asarray(b[:, 1]), np.asarray(s), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(b[:, 2]), np.asarray(s * s - 1),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(b[:, 3]),
+                               np.asarray(s ** 3 - 3 * s), atol=1e-5)
+
+
+def test_hermite_interpolates_samples():
+    """Evaluating at a cached timestamp returns the cached value."""
+    ts = jnp.array([0.9, 0.6, 0.3])
+    vals = jax.random.normal(jax.random.key(0), (3, 4, 4))
+    for i, t in enumerate([0.9, 0.6, 0.3]):
+        pred = hermite.predict(ts, vals, t, order=2)
+        np.testing.assert_allclose(np.asarray(pred), np.asarray(vals[i]),
+                                   atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# cache policies
+# ---------------------------------------------------------------------------
+
+def _fill(policy, shape, traj, ts):
+    st_ = cache_lib.init_state(policy, shape)
+    for t in ts:
+        st_ = cache_lib.update(policy, st_, traj(t), t)
+    return st_
+
+
+def test_fora_reuses_last():
+    pol = CachePolicy(kind="fora", interval=3)
+    shape = (1, 8, 4)
+    traj = lambda t: jnp.full(shape, t)
+    st_ = _fill(pol, shape, traj, [1.0, 0.8])
+    np.testing.assert_allclose(np.asarray(cache_lib.predict(pol, st_, 0.6)),
+                               0.8, atol=1e-6)
+
+
+def test_taylorseer_extrapolates_quadratic():
+    pol = CachePolicy(kind="taylorseer", interval=3, high_order=2)
+    shape = (1, 8, 4)
+    traj = lambda t: jnp.full(shape, 1.0 + 2 * t - t * t)
+    st_ = _fill(pol, shape, traj, [1.0, 0.8, 0.6])
+    want = 1.0 + 2 * 0.4 - 0.16
+    np.testing.assert_allclose(np.asarray(cache_lib.predict(pol, st_, 0.4)),
+                               want, atol=1e-3)
+
+
+def test_freqca_separates_bands():
+    """Low band (constant) reused; high band (alternating) predicted."""
+    s = 16
+    pol = CachePolicy(kind="freqca", interval=3, method="dct", rho=0.25,
+                      high_order=2)
+    alt = jnp.tile(jnp.array([1.0, -1.0]), s // 2)[None, :, None]
+    alt = jnp.broadcast_to(alt, (1, s, 4))
+
+    def traj(t):  # low: const 5t ; high: alternating with quadratic scale
+        return jnp.full((1, s, 4), 5.0 * t) + alt * (t * t)
+
+    st_ = _fill(pol, (1, s, 4), traj, [1.0, 0.8, 0.6])
+    pred = cache_lib.predict(pol, st_, 0.4)
+    # low-frequency part should be the REUSED value 5*0.6 = 3.0 …
+    mean_part = float(jnp.mean(pred))
+    assert abs(mean_part - 3.0) < 1e-2
+    # … while the high band extrapolates t^2 -> 0.16
+    high_amp = float(jnp.mean(pred * alt))
+    assert abs(high_amp - 0.16) < 2e-2
+
+
+def test_should_activate_schedule_and_warmup():
+    pol = CachePolicy(kind="freqca", interval=4, high_order=2)
+    st_ = cache_lib.init_state(pol, (1, 4, 4))
+    # no history yet -> always activate (warmup)
+    assert bool(cache_lib.should_activate(pol, st_, jnp.asarray(1)))
+    for t in [1.0, 0.9, 0.8]:
+        st_ = cache_lib.update(pol, st_, jnp.zeros((1, 4, 4)), t)
+    assert not bool(cache_lib.should_activate(pol, st_, jnp.asarray(1)))
+    assert bool(cache_lib.should_activate(pol, st_, jnp.asarray(4)))
+
+
+def test_cache_units_match_paper():
+    """Paper §4.4.1: FreqCa = 1 + 3 = 4 units; layer-wise = 2(m+1)L."""
+    pol = CachePolicy(kind="freqca", low_order=0, high_order=2)
+    assert pol.cache_units == 4
+    assert CachePolicy(kind="fora").cache_units == 1
+    assert CachePolicy(kind="taylorseer", high_order=2).cache_units == 3
+
+
+def test_cache_bytes_o1_vs_layerwise():
+    feat = (2, 64, 32)
+    pol = CachePolicy(kind="freqca", high_order=2)
+    crf_state = cache_lib.init_state(pol, feat)
+    lw_state = cache_lib.layerwise_init(pol, n_layers=57, feat_shape=feat)
+    crf_b = cache_lib.cache_bytes(crf_state)
+    lw_b = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(lw_state))
+    # paper: ~99% memory reduction vs layer-wise caching
+    assert crf_b < 0.03 * lw_b

@@ -1,0 +1,58 @@
+"""Sharding integration: lower + compile StepSpecs on a small host-device
+mesh, in a subprocess (XLA device count is locked at first jax init, so
+the 8-device flag must not leak into the other tests)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+import jax
+from repro.launch import steps as steps_lib
+from repro.roofline import hlo_analysis
+
+arch, shape = sys.argv[1], sys.argv[2]
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+with mesh:
+    spec = steps_lib.build(arch, shape, mesh)
+    compiled = jax.jit(spec.fn, in_shardings=spec.in_shardings,
+                       out_shardings=spec.out_shardings,
+                       donate_argnums=spec.donate_argnums
+                       ).lower(*spec.args).compile()
+mem = compiled.memory_analysis()
+res = hlo_analysis.analyze(compiled.as_text())
+print(json.dumps({
+    "temp": mem.temp_size_in_bytes,
+    "flops": res["flops"],
+    "coll": res["collectives"]["total_bytes"],
+}))
+"""
+
+
+def _run(arch, shape):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT, arch, shape],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+# one representative per family x step kind keeps CI time sane; the full
+# 10x4 sweep runs via `python -m repro.launch.dryrun --all` (EXPERIMENTS.md)
+@pytest.mark.parametrize("arch,shape", [
+    ("granite-moe-3b-a800m", "decode_32k"),   # MoE + ring-free decode
+    ("mamba2-370m", "train_4k"),              # SSM train (SSD scan + bwd)
+    ("seamless-m4t-medium", "decode_32k"),    # enc-dec cross-attn decode
+    ("yi-9b", "prefill_32k"),                 # dense GQA blockwise prefill
+])
+def test_lower_compile_small_mesh(arch, shape):
+    res = _run(arch, shape)
+    assert res["flops"] > 0
+    assert res["temp"] > 0

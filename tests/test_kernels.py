@@ -1,0 +1,133 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), swept over
+shapes and dtypes per the assignment."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import frequency
+from repro.kernels import dct as dct_kernel
+from repro.kernels import freqca_fused, ops, ref, ssd_scan
+
+
+@pytest.mark.parametrize("s,d", [(64, 32), (128, 128), (256, 64),
+                                 (512, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dct_kernel_matches_ref(s, d, dtype):
+    x = jax.random.normal(jax.random.key(0), (2, s, d)).astype(dtype)
+    basis = frequency.dct_basis(s)
+    y = dct_kernel.token_basis_matmul(basis, x, block_s=64, block_d=32,
+                                      block_k=64)
+    y_ref = ref.token_basis_matmul_ref(basis, x)
+    atol = 5e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("method", ["dct", "fft"])
+@pytest.mark.parametrize("s,rho", [(64, 0.0625), (128, 0.125), (256, 0.25)])
+def test_band_split_kernel_matches_decompose(method, s, rho):
+    x = jax.random.normal(jax.random.key(1), (2, s, 32))
+    low, high = dct_kernel.band_split(x, rho, method)
+    low_r, high_r = ref.band_split_ref(x, rho, method)
+    np.testing.assert_allclose(np.asarray(low), np.asarray(low_r), atol=5e-5)
+    np.testing.assert_allclose(np.asarray(high), np.asarray(high_r),
+                               atol=5e-5)
+
+
+def test_band_split_projection_idempotent():
+    """L is a projection: L(Lx) == Lx (kernel-level invariant)."""
+    x = jax.random.normal(jax.random.key(2), (1, 128, 16))
+    low, _ = dct_kernel.band_split(x, 0.125, "dct")
+    low2, _ = dct_kernel.band_split(low, 0.125, "dct")
+    np.testing.assert_allclose(np.asarray(low2), np.asarray(low), atol=5e-5)
+
+
+@pytest.mark.parametrize("k,order", [(2, 1), (3, 2), (4, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_predict_matches_ref(k, order, dtype):
+    low = jax.random.normal(jax.random.key(3), (2, 128, 64)).astype(dtype)
+    hist = jax.random.normal(jax.random.key(4), (k, 2, 128, 64)).astype(dtype)
+    ts = jnp.linspace(1.0, 0.5, k)
+    y = freqca_fused.freqca_predict_fused(low, hist, ts, 0.3, order,
+                                          block_s=64, block_d=64)
+    y_ref = ref.freqca_predict_ref(low, hist, ts, 0.3, order)
+    atol = 1e-4 if dtype == jnp.float32 else 5e-2
+    rtol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), atol=atol,
+                               rtol=rtol)
+
+
+def test_fused_weights_equal_full_solve():
+    """w = B G^{-1} b_q folding == explicit coefficient fit + eval."""
+    from repro.core import hermite
+    ts = jnp.array([1.0, 0.7, 0.4])
+    vals = jax.random.normal(jax.random.key(5), (3, 8, 8))
+    w = freqca_fused.hermite_eval_weights(ts, 0.2, 2)
+    folded = jnp.einsum("k,k...->...", w, vals)
+    direct = hermite.predict(ts, vals, 0.2, 2)
+    np.testing.assert_allclose(np.asarray(folded), np.asarray(direct),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("s,chunk", [(32, 8), (64, 16), (128, 32),
+                                     (64, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_matches_naive(s, chunk, dtype):
+    b, h, p, n = 2, 2, 16, 8
+    xs = (jax.random.normal(jax.random.key(6), (b, s, h, p)) * 0.5)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.key(7), (b, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.key(8), (h,)) * 0.3)
+    B = jax.random.normal(jax.random.key(9), (b, s, n)) * 0.5
+    C = jax.random.normal(jax.random.key(10), (b, s, n)) * 0.5
+    y = ssd_scan.ssd_chunk_scan(xs.astype(dtype), dt, A, B, C, chunk)
+    y_ref, _ = ref.ssd_naive_ref(xs, dt, A, B, C)
+    atol = 5e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), atol=atol)
+
+
+def test_ops_wrappers_jit():
+    x = jax.random.normal(jax.random.key(0), (1, 128, 32))
+    y = ops.dct_tokens(x)
+    assert y.shape == x.shape
+    lo, hi = ops.band_split(x, 0.125, "dct")
+    np.testing.assert_allclose(np.asarray(lo + hi), np.asarray(x), atol=1e-5)
+
+
+@pytest.mark.parametrize("s,hq,hkv", [(64, 4, 2), (128, 8, 8), (64, 6, 2)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 24),
+                                           (False, 0)])
+def test_flash_attention_matches_sdpa(s, hq, hkv, causal, window):
+    from repro.kernels import flash_attention as fa
+    from repro.models import attention as A
+    b, hd = 2, 16
+    q = jax.random.normal(jax.random.key(11), (b, s, hq, hd))
+    k = jax.random.normal(jax.random.key(12), (b, s, hkv, hd))
+    v = jax.random.normal(jax.random.key(13), (b, s, hkv, hd))
+    if causal:
+        mask = A.causal_mask(s, window=window)
+    else:
+        mask = jnp.ones((1, s, s), bool)
+    ref_out = A._sdpa(q, k, v, mask, hq // hkv)
+    out = fa.flash_attention(q, k, v, hq // hkv, causal=causal,
+                             window=window, q_block=32, kv_block=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               atol=5e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    from repro.kernels import flash_attention as fa
+    from repro.models import attention as A
+    b, s, hq, hkv, hd = 1, 64, 4, 2, 32
+    q = jax.random.normal(jax.random.key(1), (b, s, hq, hd)).astype(dtype)
+    k = jax.random.normal(jax.random.key(2), (b, s, hkv, hd)).astype(dtype)
+    v = jax.random.normal(jax.random.key(3), (b, s, hkv, hd)).astype(dtype)
+    ref_out = A._sdpa(q.astype(jnp.float32), k.astype(jnp.float32),
+                      v.astype(jnp.float32), A.causal_mask(s), hq // hkv)
+    out = fa.flash_attention(q, k, v, hq // hkv, q_block=32, kv_block=32)
+    atol = 5e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref_out), atol=atol)

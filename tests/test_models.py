@@ -1,0 +1,195 @@
+"""Model substrate tests: decode==full equivalence, CRF identity, SSD
+chunked==naive, MoE dispatch semantics, blockwise attention == dense."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
+from repro.models import attention, blocks, common, moe, ssm, transformer
+
+
+def tiny_cfg(**kw):
+    base = dict(arch_id="tiny", family="dense", n_layers=2, d_model=64,
+                n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                head_dim=16, dtype="float32", remat=False)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def toks():
+    return jax.random.randint(jax.random.key(1), (2, 16), 0, 256)
+
+
+def _decode_matches_full(cfg, toks, atol=2e-4):
+    params = common.init_params(transformer.lm_specs(cfg), jax.random.key(0))
+    full = transformer.forward(params, toks, cfg)
+    cache = blocks.stack_cache_zeros(cfg, toks.shape[0], toks.shape[1],
+                                     jnp.float32)
+    outs = []
+    for i in range(toks.shape[1]):
+        lg, cache = transformer.decode_step(params, toks[:, i:i + 1], cache,
+                                            cfg)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full.logits),
+                               atol=atol)
+    return full
+
+
+def test_dense_decode_matches_full(toks):
+    _decode_matches_full(tiny_cfg(), toks)
+
+
+def test_ssm_decode_matches_full(toks):
+    cfg = tiny_cfg(family="ssm", d_ff=0, n_kv_heads=4,
+                   ssm=SSMConfig(d_state=16, head_dim=16, chunk=8))
+    _decode_matches_full(cfg, toks, atol=1e-3)
+
+
+def test_hybrid_decode_matches_full(toks):
+    cfg = tiny_cfg(family="hybrid", n_layers=8, attn_every=8, d_ff=64,
+                   moe=MoEConfig(n_experts=4, top_k=2, every=2,
+                                 capacity_factor=8.0),
+                   ssm=SSMConfig(d_state=16, head_dim=16, chunk=8))
+    _decode_matches_full(cfg, toks, atol=1e-3)
+
+
+def test_sliding_window_decode_matches_full(toks):
+    cfg = tiny_cfg(sliding_window=8)
+    params = common.init_params(transformer.lm_specs(cfg), jax.random.key(0))
+    full = transformer.forward(params, toks, cfg)
+    # ring cache sized exactly one window
+    cache = blocks.stack_cache_zeros(cfg, 2, 8, jnp.float32)
+    outs = []
+    for i in range(16):
+        lg, cache = transformer.decode_step(params, toks[:, i:i + 1], cache,
+                                            cfg, window=8)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full.logits),
+                               atol=2e-4)
+
+
+def test_crf_equals_embedding_plus_residuals(toks):
+    """The CRF is literally h0 + sum of residual updates (paper §3.2.2)."""
+    cfg = tiny_cfg()
+    params = common.init_params(transformer.lm_specs(cfg), jax.random.key(0))
+    out = transformer.forward(params, toks, cfg)
+    # recompute manually, accumulating residual deltas
+    h = common.embed(params["embed"], toks).astype(jnp.float32)
+    h0 = h
+    total = jnp.zeros_like(h)
+    for layer in range(cfg.n_layers):
+        lp = jax.tree.map(lambda p: p[layer], params["stack"]["l0"])
+        h_new, _ = blocks.block_full(lp, h, cfg, "attn", False)
+        total = total + (h_new - h)
+        h = h_new
+    # scan vs unrolled differ by f32 reassociation only -> relative tol
+    np.testing.assert_allclose(np.asarray(h0 + total), np.asarray(out.crf),
+                               rtol=3e-3, atol=2e-3)
+
+
+def test_blockwise_attention_matches_dense():
+    b, s, hq, hkv, hd = 2, 64, 4, 2, 16
+    q = jax.random.normal(jax.random.key(1), (b, s, hq, hd))
+    k = jax.random.normal(jax.random.key(2), (b, s, hkv, hd))
+    v = jax.random.normal(jax.random.key(3), (b, s, hkv, hd))
+    for window in (0, 24):
+        ref = attention._sdpa(q, k, v, attention.causal_mask(s, window),
+                              hq // hkv)
+        out = attention.blockwise_sdpa(q, k, v, hq // hkv, window=window,
+                                       q_block=16, kv_block=16)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5)
+
+
+def test_ssd_chunked_matches_naive():
+    from repro.kernels import ref as kref
+    b, s, h, p, n = 2, 64, 4, 32, 16
+    xs = jax.random.normal(jax.random.key(2), (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.key(3), (b, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.key(4), (h,)) * 0.3)
+    B = jax.random.normal(jax.random.key(5), (b, s, n)) * 0.5
+    C = jax.random.normal(jax.random.key(6), (b, s, n)) * 0.5
+    y_naive, st_naive = kref.ssd_naive_ref(xs, dt, A, B, C)
+    for chunk in (8, 16, 32, 64):
+        y_chunk, st_chunk = ssm.ssd_chunked(xs, dt, A, B, C, chunk)
+        np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_naive),
+                                   atol=2e-4, err_msg=f"chunk={chunk}")
+    np.testing.assert_allclose(np.asarray(st_chunk), np.asarray(st_naive),
+                               atol=2e-4)
+
+
+def test_moe_matches_dense_reference():
+    """Einsum-dispatch MoE == per-token loop when capacity is unlimited."""
+    cfg = tiny_cfg(family="moe", d_ff=32,
+                   moe=MoEConfig(n_experts=4, top_k=2, capacity_factor=16.0))
+    params = common.init_params(moe.moe_specs(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 8, 64))
+    y, aux = moe.moe_ffn(params, x, cfg)
+    assert float(aux.drop_fraction) == 0.0
+
+    # reference: explicit per-token top-k mixture
+    flat = x.reshape(-1, 64)
+    logits = flat @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    top_v, top_i = jax.lax.top_k(probs, 2)
+    top_v = top_v / top_v.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(flat)
+    for t in range(flat.shape[0]):
+        acc = jnp.zeros((64,))
+        for j in range(2):
+            e = int(top_i[t, j])
+            h = jax.nn.silu(flat[t] @ params["wi_gate"][e]) * \
+                (flat[t] @ params["wi_up"][e])
+            acc += top_v[t, j] * (h @ params["wo"][e])
+        ref = ref.at[t].set(acc)
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, 64)),
+                               np.asarray(ref), atol=1e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = tiny_cfg(family="moe", d_ff=32,
+                   moe=MoEConfig(n_experts=4, top_k=2, capacity_factor=0.5))
+    params = common.init_params(moe.moe_specs(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 32, 64))
+    _, aux = moe.moe_ffn(params, x, cfg)
+    assert float(aux.drop_fraction) > 0.0
+
+
+def test_encdec_decode_matches_full():
+    from repro.models import encdec
+    cfg = tiny_cfg(family="audio", is_encdec=True, n_enc_layers=2,
+                   n_kv_heads=4)
+    p = common.init_params(encdec.encdec_specs(cfg), jax.random.key(0))
+    frames = jax.random.normal(jax.random.key(2), (2, 24, 64))
+    toks = jax.random.randint(jax.random.key(1), (2, 12), 0, 256)
+    out = encdec.forward(p, frames, toks, cfg)
+    cache = encdec.decode_cache_zeros(cfg, 2, 12, jnp.float32)
+    dec = []
+    for i in range(12):
+        lg, cache = encdec.decode_step(p, toks[:, i:i + 1], out.memory,
+                                       cache, cfg)
+        dec.append(lg[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(dec, 1)),
+                               np.asarray(out.logits), atol=2e-4)
+
+
+def test_chunked_ce_matches_dense():
+    cfg = tiny_cfg()
+    params = common.init_params(transformer.lm_specs(cfg), jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 24), 0, 256)
+    labels = jnp.concatenate(
+        [toks[:, 1:], -jnp.ones((2, 1), jnp.int32)], axis=1)
+    out = transformer.forward(params, toks, cfg)
+    hn = common.rmsnorm(params["final_norm"], out.crf, cfg.norm_eps)
+    chunked = transformer.chunked_cross_entropy(params, hn, labels, cfg,
+                                                chunk=8)
+    logp = jax.nn.log_softmax(out.logits.astype(jnp.float32), -1)
+    valid = labels >= 0
+    nll = -jnp.take_along_axis(logp, jnp.maximum(labels, 0)[..., None],
+                               axis=-1)[..., 0]
+    dense = jnp.sum(nll * valid) / jnp.sum(valid)
+    np.testing.assert_allclose(float(chunked), float(dense), rtol=1e-5)
