@@ -18,8 +18,11 @@ from repro.launch.train import train_dit
 from repro.models import common as mcommon
 from repro.models import dit
 
-CKPT_DIR = "results/bench_ckpt"
-IMG_SIZE = 32
+# --smoke (benchmarks/run.py) shrinks everything via these env knobs so
+# the whole suite finishes in CI-minutes on a CPU runner
+REDUCED = os.environ.get("BENCH_REDUCED", "") == "1"
+CKPT_DIR = "results/bench_ckpt_smoke" if REDUCED else "results/bench_ckpt"
+IMG_SIZE = int(os.environ.get("BENCH_IMG_SIZE", "32"))
 TRAIN_STEPS = int(os.environ.get("BENCH_TRAIN_STEPS", "200"))
 N_STEPS = int(os.environ.get("BENCH_SAMPLE_STEPS", "50"))
 BATCH = int(os.environ.get("BENCH_BATCH", "4"))
@@ -28,6 +31,8 @@ BATCH = int(os.environ.get("BENCH_BATCH", "4"))
 def get_model():
     """Train (once) and cache the small DiT used by the quality benches."""
     cfg = config_lib.get_config("dit-small")
+    if REDUCED:
+        cfg = config_lib.reduced(cfg)
     specs = dit.dit_specs(cfg)
     like = mcommon.init_params(specs, jax.random.key(0),
                                jnp.dtype(cfg.dtype))

@@ -1,6 +1,7 @@
-"""End-to-end serving driver (the paper's deployment shape): batched
-generation requests through the FreqCa DiffusionEngine, with latency,
-speedup, and fidelity report.
+"""End-to-end serving driver (the paper's deployment shape): a
+mixed-size stream of generation + editing requests through the
+continuous-batching FreqCa DiffusionEngine — per-bucket precompiled
+executables, age-based batch formation, metrics report.
 
   PYTHONPATH=src python examples/serve_batch.py
 """
@@ -8,6 +9,7 @@ from repro.launch import serve
 
 if __name__ == "__main__":
     import sys
-    sys.argv = [sys.argv[0], "--requests", "8", "--interval", "5",
-                "--steps", "50", "--train-steps", "120"]
+    sys.argv = [sys.argv[0], "--requests", "16", "--interval", "5",
+                "--steps", "50", "--train-steps", "120", "--batch", "8",
+                "--edit-every", "5"]
     serve.main()

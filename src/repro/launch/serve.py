@@ -1,14 +1,18 @@
-"""Serving launcher — the paper's deployment shape.
+"""Serving launcher — the paper's deployment shape, continuous batching.
 
-Trains (or restores) the small DiT, then serves batched generation
-requests through the FreqCa-cached DiffusionEngine and reports latency,
-speedup vs the uncached engine, and output fidelity (PSNR vs uncached).
+Trains (or restores) the small DiT, precompiles one sampler executable
+per batch bucket, then serves a mixed-size request stream (generation +
+editing) through the FreqCa-cached DiffusionEngine.  Reports the
+scheduler/engine metrics (occupancy, p50/p95 latency, full-step
+fraction, compile cache), throughput, speedup vs the uncached engine,
+and output fidelity (PSNR vs uncached).
 
-  PYTHONPATH=src python -m repro.launch.serve --requests 8 --interval 5
+  PYTHONPATH=src python -m repro.launch.serve --requests 16 --interval 5
 """
 from __future__ import annotations
 
 import argparse
+import itertools
 import time
 
 import jax
@@ -17,8 +21,10 @@ import numpy as np
 
 from repro import configs as config_lib
 from repro.core.cache import CachePolicy
+from repro.data import synthetic
 from repro.launch.train import train_dit
-from repro.models import common, dit
+from repro.models import dit
+from repro.serving import metrics as metrics_lib
 from repro.serving.engine import DiffusionEngine, DiffusionRequest
 
 
@@ -29,16 +35,58 @@ def psnr(a, b, data_range=2.0):
     return 10.0 * np.log10(data_range ** 2 / mse)
 
 
+def mixed_stream(n_requests: int, size: int, channels: int,
+                 edit_every: int = 5):
+    """Deterministic mixed request stream: bursts of varying size, every
+    ``edit_every``-th request an editing request from a synthetic ref."""
+    reqs, rid = [], 0
+    burst_sizes = itertools.cycle([1, 3, 8, 2, 4, 1])
+    while rid < n_requests:
+        burst = []
+        for _ in range(min(next(burst_sizes), n_requests - rid)):
+            if edit_every and rid % edit_every == edit_every - 1:
+                ref = synthetic.shapes_batch(jax.random.key(1000 + rid), 1,
+                                             size=size, channels=channels)[0]
+                burst.append(DiffusionRequest(request_id=rid, seed=rid,
+                                              init_latents=ref,
+                                              edit_strength=0.5))
+            else:
+                burst.append(DiffusionRequest(request_id=rid, seed=rid))
+            rid += 1
+        reqs.append(burst)
+    return reqs
+
+
+def serve_stream(eng: DiffusionEngine, bursts) -> tuple:
+    """Replay bursts through the engine; each burst is drained before the
+    next arrives (closed-loop client)."""
+    outs = []
+    t0 = time.perf_counter()
+    for burst in bursts:
+        for r in burst:
+            eng.submit(r)
+        outs.extend(eng.serve_until_drained())
+    wall = time.perf_counter() - t0
+    return outs, wall
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--interval", type=int, default=5)
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--train-steps", type=int, default=150)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="max batch (largest bucket signature)")
     ap.add_argument("--method", default="dct", choices=["dct", "fft"])
+    ap.add_argument("--max-wait", type=float, default=0.05,
+                    help="age threshold for batch formation (s)")
+    ap.add_argument("--edit-every", type=int, default=5,
+                    help="every Nth request is an editing request (0=off)")
     args = ap.parse_args()
 
+    if args.requests < 1:
+        raise SystemExit("--requests must be >= 1")
     cfg = config_lib.get_config("dit-small")
     print("training dit-small on synthetic shapes ...")
     params = train_dit(cfg, args.train_steps, 16, ckpt_dir="")
@@ -58,7 +106,8 @@ def main():
         return DiffusionEngine(full_fn, from_crf_fn,
                                (size, size, cfg.in_channels),
                                (n_tokens, cfg.d_model), policy,
-                               n_steps=args.steps, max_batch=args.batch)
+                               n_steps=args.steps, max_batch=args.batch,
+                               max_wait_s=args.max_wait)
 
     eng_freqca = engine(CachePolicy(kind="freqca", interval=args.interval,
                                     method=args.method))
@@ -66,20 +115,25 @@ def main():
 
     results = {}
     for name, eng in [("freqca", eng_freqca), ("full", eng_full)]:
-        for i in range(args.requests):
-            eng.submit(DiffusionRequest(request_id=i, seed=i))
-        outs = []
-        t0 = time.perf_counter()
-        while True:
-            batch_out = eng.run_batch()
-            if not batch_out:
-                break
-            outs.extend(batch_out)
-        wall = time.perf_counter() - t0
+        warm = eng.warmup()
+        print(f"[{name:7s}] warmup: {len(eng.buckets)} bucket executables "
+              f"in {warm:.1f}s")
+        bursts = mixed_stream(args.requests, size, cfg.in_channels,
+                              edit_every=args.edit_every)
+        outs, wall = serve_stream(eng, bursts)
+        outs.sort(key=lambda o: o.request_id)
         results[name] = (outs, wall)
+        s = eng.metrics.summary()
+        rps = metrics_lib.throughput(eng.metrics, wall)
         print(f"[{name:7s}] served {len(outs)} requests in {wall:.2f}s "
-              f"({wall / len(outs):.3f}s/req), "
-              f"full steps/req: {outs[0].n_full_steps}/{args.steps}")
+              f"({rps:.2f} req/s), full steps/req: "
+              f"{outs[0].n_full_steps}/{args.steps}")
+        print(f"[{name:7s}] occupancy {s['mean_occupancy']:.2f}  "
+              f"latency p50/p95 {s['request_latency_p50_s']:.3f}/"
+              f"{s['request_latency_p95_s']:.3f}s  "
+              f"full-step frac {s['full_step_fraction']:.2f}  "
+              f"compiles {s['compile_misses']} "
+              f"(steady-state hits {s['compile_hits']})")
 
     f_outs, f_wall = results["freqca"]
     u_outs, u_wall = results["full"]

@@ -1,19 +1,23 @@
 """Batched serving engines.
 
-``DiffusionEngine`` — the paper's deployment shape: requests queue up,
-the batcher pads them to a fixed batch signature, and one jitted
-FreqCa-cached sampler serves the whole batch.  Jit cache is keyed on
-(batch, steps, policy) so steady-state serving never recompiles.
+``DiffusionEngine`` — continuous-batching deployment of the FreqCa
+sampler: requests land in a ``Scheduler`` queue, batches are cut on
+age/deadline pressure and quantised to power-of-two *bucket signatures*
+(see repro.serving.scheduler), and one jitted sampler executable per
+bucket serves them for the life of the process.  The jit cache is keyed
+on the bucket shape only, so steady-state serving never recompiles; the
+input buffer is donated (``donate_argnums=0``) so the noise batch is
+reused as sampler scratch.  When a ``jax.sharding.Mesh`` is supplied the
+batch is placed via ``repro.sharding.partitioning.batch_spec`` so GSPMD
+splits lanes over the data axes.
 
 ``LMEngine`` — prefill + decode for the assigned LM architectures
 (KV-cache ring for sliding-window configs).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 import time
-from typing import Any, Callable, Dict, List, NamedTuple, Optional
+from typing import Callable, List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -23,15 +27,12 @@ from repro.core.cache import CachePolicy
 from repro.diffusion import sampler as sampler_lib
 from repro.diffusion import schedule
 from repro.models import blocks, transformer
+from repro.serving.metrics import ServeMetrics
+from repro.serving.scheduler import (BatchPlan, DiffusionRequest, Scheduler,
+                                     bucket_sizes)
 
-
-@dataclasses.dataclass
-class DiffusionRequest:
-    request_id: int
-    seed: int
-    # optional conditioning (e.g. reference latents for editing)
-    init_latents: Optional[jnp.ndarray] = None
-    edit_strength: float = 0.0
+__all__ = ["DiffusionEngine", "DiffusionRequest", "DiffusionResult",
+           "LMEngine"]
 
 
 class DiffusionResult(NamedTuple):
@@ -39,15 +40,18 @@ class DiffusionResult(NamedTuple):
     latents: jnp.ndarray
     n_full_steps: int
     wall_time_s: float
+    queue_wait_s: float = 0.0
+    bucket: int = 0
 
 
 class DiffusionEngine:
-    """Queue + fixed-batch FreqCa-cached rectified-flow sampler."""
+    """Continuous-batching FreqCa-cached rectified-flow sampler."""
 
     def __init__(self, full_fn: Callable, from_crf_fn: Callable,
                  latent_shape, crf_shape, policy: CachePolicy,
                  n_steps: int = 50, max_batch: int = 8,
-                 crf_dtype=jnp.float32):
+                 crf_dtype=jnp.float32, max_wait_s: float = 0.0,
+                 pad_to_max: bool = False, mesh=None):
         self.full_fn = full_fn
         self.from_crf_fn = from_crf_fn
         self.latent_shape = tuple(latent_shape)      # [H, W, C]
@@ -56,46 +60,123 @@ class DiffusionEngine:
         self.n_steps = n_steps
         self.max_batch = max_batch
         self.crf_dtype = crf_dtype
-        self.queue: List[DiffusionRequest] = []
-
-    def submit(self, req: DiffusionRequest) -> None:
-        self.queue.append(req)
-
-    @functools.lru_cache(maxsize=8)
-    def _compiled(self, batch: int):
-        ts = schedule.timesteps(self.n_steps)
+        self.mesh = mesh
+        self.scheduler = Scheduler(max_batch=max_batch,
+                                   max_wait_s=max_wait_s,
+                                   pad_to_max=pad_to_max)
+        self.metrics = ServeMetrics()
+        self._ts = schedule.timesteps(n_steps)
 
         def run(x_init):
+            # batch size is static at trace time -> one executable per
+            # bucket signature, cached for the process lifetime
+            batch = x_init.shape[0]
             res = sampler_lib.sample(
-                self.full_fn, self.from_crf_fn, x_init, ts, self.policy,
-                crf_shape=(batch,) + self.crf_shape,
+                self.full_fn, self.from_crf_fn, x_init, self._ts,
+                self.policy, crf_shape=(batch,) + self.crf_shape,
                 crf_dtype=self.crf_dtype)
             return res.x, res.n_full
-        return jax.jit(run)
 
-    def run_batch(self) -> List[DiffusionResult]:
-        if not self.queue:
-            return []
-        reqs, self.queue = self.queue[:self.max_batch], \
-            self.queue[self.max_batch:]
-        batch = len(reqs)
-        pad = self.max_batch - batch           # fixed signature: pad to max
-        noises = [jax.random.normal(jax.random.key(r.seed),
-                                    self.latent_shape) for r in reqs]
-        noises += [jnp.zeros(self.latent_shape)] * pad
-        x_init = jnp.stack(noises)
-        for i, r in enumerate(reqs):
+        self._jit_run = jax.jit(run, donate_argnums=0)
+
+    # --- compile-cache management ---------------------------------------
+    @property
+    def buckets(self) -> List[int]:
+        return bucket_sizes(self.max_batch)
+
+    def compiled_buckets(self) -> int:
+        """Jit-cache probe: number of bucket executables compiled so far."""
+        try:
+            return self._jit_run._cache_size()
+        except AttributeError:
+            # private jax API; if it moves, serving must keep working —
+            # compile accounting degrades to all-hits
+            return -1
+
+    def warmup(self, buckets: Optional[Sequence[int]] = None) -> float:
+        """Precompile sampler executables for every bucket signature.
+
+        Returns wall seconds spent.  After warmup, serving any mix of
+        batch sizes hits the jit cache — zero steady-state recompiles.
+        """
+        t0 = time.perf_counter()
+        for b in (buckets or self.buckets):
+            x = self._place(jnp.zeros((b,) + self.latent_shape))
+            cache_before = self.compiled_buckets()
+            out, _ = self._jit_run(x)
+            out.block_until_ready()
+            self.metrics.observe_compile(
+                hit=self.compiled_buckets() == cache_before)
+        return time.perf_counter() - t0
+
+    # --- request path ----------------------------------------------------
+    def submit(self, req: DiffusionRequest,
+               now: Optional[float] = None) -> None:
+        self.scheduler.submit(req, now=now)
+
+    def build_x_init(self, plan: BatchPlan) -> jnp.ndarray:
+        """[bucket, H, W, C] noise batch; editing lanes partially noised,
+        padded lanes zero."""
+        lanes = []
+        for r in plan.requests:
+            noise = jax.random.normal(jax.random.key(r.seed),
+                                      self.latent_shape)
             if r.init_latents is not None:
                 # image editing: start from a partially noised reference
-                t0 = r.edit_strength
-                x_init = x_init.at[i].set(
-                    schedule.add_noise(r.init_latents, x_init[i], t0))
+                ref = jnp.asarray(r.init_latents, noise.dtype)
+                lanes.append(schedule.add_noise(ref, noise,
+                                                r.edit_strength))
+            else:
+                lanes.append(noise)
+        lanes += [jnp.zeros(self.latent_shape)] * (plan.bucket - plan.n_real)
+        return jnp.stack(lanes)
+
+    def _place(self, x: jnp.ndarray) -> jnp.ndarray:
+        if self.mesh is None:
+            return jax.device_put(x)
+        from repro.sharding import partitioning
+        return jax.device_put(
+            x, partitioning.batch_spec(self.mesh, x.shape[0], x.ndim))
+
+    def _execute(self, plan: BatchPlan) -> List[DiffusionResult]:
+        x_init = self._place(self.build_x_init(plan))
+        cache_before = self.compiled_buckets()
         t0 = time.perf_counter()
-        x, n_full = self._compiled(self.max_batch)(x_init)
+        x, n_full = self._jit_run(x_init)
         x.block_until_ready()
-        dt = time.perf_counter() - t0
-        return [DiffusionResult(r.request_id, x[i], int(n_full), dt)
-                for i, r in enumerate(reqs)]
+        wall = time.perf_counter() - t0
+        self.metrics.observe_compile(
+            hit=self.compiled_buckets() == cache_before)
+        self.metrics.observe_batch(plan.bucket, plan.n_real, wall,
+                                   int(n_full), self.n_steps)
+        out = []
+        for i, r in enumerate(plan.requests):   # padded lanes never leak
+            wait = max(0.0, plan.formed_at - r.submit_time)
+            self.metrics.observe_request(wait, wait + wall)
+            out.append(DiffusionResult(r.request_id, x[i], int(n_full),
+                                       wall, wait, plan.bucket))
+        return out
+
+    def run_batch(self, flush: bool = True,
+                  now: Optional[float] = None) -> List[DiffusionResult]:
+        """Cut and serve one batch.  ``flush=True`` (default) drains the
+        queue immediately; ``flush=False`` respects age/deadline-based
+        batch formation and returns [] while the scheduler holds back."""
+        self.metrics.observe_queue_depth(self.scheduler.depth)
+        plan = self.scheduler.form_batch(now=now, flush=flush)
+        if plan is None:
+            return []
+        return self._execute(plan)
+
+    def serve_until_drained(self, flush: bool = True,
+                            poll_s: float = 0.005) -> List[DiffusionResult]:
+        out: List[DiffusionResult] = []
+        while self.scheduler.depth:
+            served = self.run_batch(flush=flush)
+            out.extend(served)
+            if not served:   # scheduler holding back: wait, don't spin
+                time.sleep(poll_s)
+        return out
 
 
 class LMEngine:

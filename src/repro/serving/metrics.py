@@ -1,0 +1,113 @@
+"""Serving metrics: queue depth, batch occupancy, latency percentiles,
+full-step fraction, and compile-cache accounting.
+
+One ``ServeMetrics`` instance per engine.  Recording is cheap (python
+lists + counters); ``summary()`` does the aggregation so it can be
+called once at the end of a serving run or periodically for dashboards.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+def percentile(xs: List[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]) without numpy."""
+    if not xs:
+        return 0.0
+    ys = sorted(xs)
+    k = max(0, min(len(ys) - 1, int(round(q / 100.0 * (len(ys) - 1)))))
+    return float(ys[k])
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    # compile cache
+    compile_hits: int = 0
+    compile_misses: int = 0
+    # batch-level observations
+    batch_walls: List[float] = dataclasses.field(default_factory=list)
+    batch_buckets: List[int] = dataclasses.field(default_factory=list)
+    batch_occupancy: List[float] = dataclasses.field(default_factory=list)
+    full_steps: int = 0
+    total_steps: int = 0
+    # request-level observations
+    request_waits: List[float] = dataclasses.field(default_factory=list)
+    request_latencies: List[float] = dataclasses.field(default_factory=list)
+    # queue depth samples (taken whenever the engine polls the queue)
+    queue_depths: List[int] = dataclasses.field(default_factory=list)
+
+    # --- recording -------------------------------------------------------
+    def observe_compile(self, hit: bool) -> None:
+        if hit:
+            self.compile_hits += 1
+        else:
+            self.compile_misses += 1
+
+    def observe_queue_depth(self, depth: int) -> None:
+        self.queue_depths.append(int(depth))
+
+    def observe_batch(self, bucket: int, n_real: int, wall_s: float,
+                      n_full: int, n_steps: int) -> None:
+        self.batch_walls.append(float(wall_s))
+        self.batch_buckets.append(int(bucket))
+        self.batch_occupancy.append(n_real / max(bucket, 1))
+        # padded lanes still burn the compute, so account per-lane
+        self.full_steps += int(n_full) * int(bucket)
+        self.total_steps += int(n_steps) * int(bucket)
+
+    def observe_request(self, wait_s: float, latency_s: float) -> None:
+        self.request_waits.append(float(wait_s))
+        self.request_latencies.append(float(latency_s))
+
+    # --- aggregation -----------------------------------------------------
+    @property
+    def n_requests(self) -> int:
+        return len(self.request_latencies)
+
+    @property
+    def n_batches(self) -> int:
+        return len(self.batch_walls)
+
+    def full_step_fraction(self) -> float:
+        return self.full_steps / max(self.total_steps, 1)
+
+    def summary(self) -> Dict:
+        walls = self.batch_walls
+        lats = self.request_latencies
+        return {
+            "requests": self.n_requests,
+            "batches": self.n_batches,
+            "mean_occupancy": round(
+                sum(self.batch_occupancy) / max(self.n_batches, 1), 3),
+            "mean_bucket": round(
+                sum(self.batch_buckets) / max(self.n_batches, 1), 2),
+            "batch_wall_p50_s": round(percentile(walls, 50), 4),
+            "batch_wall_p95_s": round(percentile(walls, 95), 4),
+            "request_latency_p50_s": round(percentile(lats, 50), 4),
+            "request_latency_p95_s": round(percentile(lats, 95), 4),
+            "request_wait_p50_s": round(
+                percentile(self.request_waits, 50), 4),
+            "full_step_fraction": round(self.full_step_fraction(), 4),
+            "compile_hits": self.compile_hits,
+            "compile_misses": self.compile_misses,
+            "max_queue_depth": max(self.queue_depths, default=0),
+        }
+
+    def snapshot(self) -> "ServeMetrics":
+        """Copy for before/after deltas (e.g. steady-state recompiles)."""
+        return dataclasses.replace(
+            self,
+            batch_walls=list(self.batch_walls),
+            batch_buckets=list(self.batch_buckets),
+            batch_occupancy=list(self.batch_occupancy),
+            request_waits=list(self.request_waits),
+            request_latencies=list(self.request_latencies),
+            queue_depths=list(self.queue_depths),
+        )
+
+
+def throughput(metrics: ServeMetrics, wall_s: float) -> Optional[float]:
+    if wall_s <= 0:
+        return None
+    return metrics.n_requests / wall_s

@@ -1,0 +1,126 @@
+"""Request queue + bucketed batch formation for the diffusion engine.
+
+The seed engine padded every batch to ``max_batch`` — a single request
+paid full-batch latency.  The scheduler instead quantises batch sizes to
+a small ladder of *bucket signatures* (powers of two up to
+``max_batch``), so the engine compiles one sampler executable per bucket
+and a lone request runs in the batch-1 program.
+
+Batch formation is deadline/age-based: a batch is cut when the queue
+can fill the largest bucket, when the oldest request has waited
+``max_wait_s``, or when a per-request deadline is about to lapse.
+``flush=True`` cuts whatever is queued immediately (drain mode — the
+seed engine's behaviour).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, NamedTuple, Optional
+
+
+@dataclasses.dataclass
+class DiffusionRequest:
+    request_id: int
+    seed: int
+    # optional conditioning (e.g. reference latents for editing)
+    init_latents: Optional[object] = None
+    edit_strength: float = 0.0
+    # serving QoS: cut a batch early rather than let this lapse
+    deadline_s: Optional[float] = None
+    # accounting (stamped by Scheduler.submit)
+    submit_time: float = 0.0
+
+
+class BatchPlan(NamedTuple):
+    requests: List[DiffusionRequest]
+    bucket: int          # padded batch signature the engine will run
+    formed_at: float     # scheduler clock when the batch was cut
+
+    @property
+    def n_real(self) -> int:
+        return len(self.requests)
+
+    @property
+    def occupancy(self) -> float:
+        return self.n_real / max(self.bucket, 1)
+
+
+def bucket_sizes(max_batch: int) -> List[int]:
+    """Powers of two up to ``max_batch`` (always including max_batch)."""
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    sizes = []
+    b = 1
+    while b < max_batch:
+        sizes.append(b)
+        b *= 2
+    sizes.append(max_batch)
+    return sizes
+
+
+def bucket_for(n: int, max_batch: int) -> int:
+    """Smallest bucket signature that fits ``n`` requests."""
+    if n < 1:
+        raise ValueError(f"need at least one request, got {n}")
+    if n > max_batch:
+        raise ValueError(f"{n} requests exceed max_batch={max_batch}")
+    for b in bucket_sizes(max_batch):
+        if b >= n:
+            return b
+    return max_batch
+
+
+class Scheduler:
+    """FIFO request queue with age/deadline-triggered batch cutting."""
+
+    def __init__(self, max_batch: int = 8, max_wait_s: float = 0.05,
+                 pad_to_max: bool = False, clock=time.monotonic):
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self.pad_to_max = pad_to_max  # seed-compatible fixed signature
+        self.clock = clock
+        self.queue: List[DiffusionRequest] = []
+        self.submitted = 0
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+    @property
+    def depth(self) -> int:
+        return len(self.queue)
+
+    def submit(self, req: DiffusionRequest,
+               now: Optional[float] = None) -> None:
+        req.submit_time = self.clock() if now is None else now
+        self.queue.append(req)
+        self.submitted += 1
+
+    def _deadline_pressure(self, now: float) -> bool:
+        for r in self.queue:
+            if r.deadline_s is not None and \
+                    now - r.submit_time >= r.deadline_s:
+                return True
+        return False
+
+    def ready(self, now: Optional[float] = None) -> bool:
+        """Would ``form_batch`` cut a batch right now (without flushing)?"""
+        if not self.queue:
+            return False
+        now = self.clock() if now is None else now
+        if len(self.queue) >= self.max_batch:
+            return True
+        oldest_age = now - self.queue[0].submit_time
+        return oldest_age >= self.max_wait_s or self._deadline_pressure(now)
+
+    def form_batch(self, now: Optional[float] = None,
+                   flush: bool = False) -> Optional[BatchPlan]:
+        """Cut the next batch, or None if nothing is ready yet."""
+        now = self.clock() if now is None else now
+        if not self.queue or not (flush or self.ready(now)):
+            return None
+        take = min(len(self.queue), self.max_batch)
+        reqs, self.queue = self.queue[:take], self.queue[take:]
+        bucket = (self.max_batch if self.pad_to_max
+                  else bucket_for(take, self.max_batch))
+        return BatchPlan(requests=reqs, bucket=bucket, formed_at=now)

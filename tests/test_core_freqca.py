@@ -1,22 +1,40 @@
 """Unit + property tests for the paper's core: frequency decomposition,
 Hermite prediction, CRF caching, and the policy state machines."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+# property tests skip gracefully when hypothesis is absent (CI installs
+# it via `pip install -e .[dev]`; the bare tier-1 env may not have it)
+# while the deterministic tests below keep running either way
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given
+
+    hypothesis.settings.register_profile(
+        "ci", deadline=None, max_examples=25,
+        suppress_health_check=list(hypothesis.HealthCheck))
+    hypothesis.settings.load_profile("ci")
+except ImportError:
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()   # strategy expressions in decorators still eval
+
+    def given(*a, **k):
+        def deco(fn):
+            def skipper():
+                pytest.importorskip("hypothesis")
+            skipper.__name__ = fn.__name__
+            return skipper
+        return deco
 
 from repro.core import cache as cache_lib
 from repro.core import frequency, hermite
 from repro.core.cache import CachePolicy
-
-hypothesis.settings.register_profile(
-    "ci", deadline=None, max_examples=25,
-    suppress_health_check=list(hypothesis.HealthCheck))
-hypothesis.settings.load_profile("ci")
-
 
 # ---------------------------------------------------------------------------
 # frequency decomposition

@@ -1,0 +1,206 @@
+"""Continuous-batching serving tests: bucket selection, age/deadline
+batch formation, padded-lane isolation, the editing noising path, and
+the zero-steady-state-recompile guarantee (via the jit cache probe)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as config_lib
+from repro.core.cache import CachePolicy
+from repro.data import synthetic
+from repro.diffusion import schedule
+from repro.serving import metrics as metrics_lib
+from repro.serving.engine import DiffusionEngine, DiffusionRequest
+from repro.serving.scheduler import Scheduler, bucket_for, bucket_sizes
+
+SIZE = 8
+N_STEPS = 6
+
+
+@pytest.fixture(scope="module")
+def dit_fns():
+    from repro.models import common, dit
+    cfg = config_lib.reduced(config_lib.get_config("dit-small"))
+    params = common.init_params(dit.dit_specs(cfg), jax.random.key(0))
+
+    def full_fn(x, t):
+        tb = jnp.full((x.shape[0],), t)
+        out = dit.dit_forward(params, x, tb, cfg)
+        return out.velocity, out.crf
+
+    def from_crf_fn(crf, t):
+        tb = jnp.full((crf.shape[0],), t)
+        return dit.dit_from_crf(params, crf, tb, cfg, SIZE, SIZE)
+
+    return cfg, full_fn, from_crf_fn
+
+
+def make_engine(dit_fns, max_batch=4, **kw):
+    cfg, full_fn, from_crf_fn = dit_fns
+    return DiffusionEngine(full_fn, from_crf_fn, (SIZE, SIZE,
+                                                  cfg.in_channels),
+                           (16, cfg.d_model),
+                           CachePolicy(kind="freqca", interval=3),
+                           n_steps=N_STEPS, max_batch=max_batch, **kw)
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def test_bucket_sizes_and_selection():
+    assert bucket_sizes(8) == [1, 2, 4, 8]
+    assert bucket_sizes(6) == [1, 2, 4, 6]   # non-pow2 max still included
+    assert bucket_sizes(1) == [1]
+    assert bucket_for(1, 8) == 1
+    assert bucket_for(3, 8) == 4
+    assert bucket_for(5, 8) == 8
+    assert bucket_for(5, 6) == 6
+    with pytest.raises(ValueError):
+        bucket_for(9, 8)
+    with pytest.raises(ValueError):
+        bucket_for(0, 8)
+
+
+def test_scheduler_age_based_formation():
+    sched = Scheduler(max_batch=4, max_wait_s=10.0, clock=lambda: 0.0)
+    sched.submit(DiffusionRequest(request_id=0, seed=0), now=0.0)
+    assert not sched.ready(now=1.0)          # young + underfull: hold
+    assert sched.form_batch(now=1.0) is None
+    assert sched.ready(now=10.0)             # age threshold reached
+    plan = sched.form_batch(now=10.0)
+    assert plan.n_real == 1 and plan.bucket == 1
+
+    for i in range(4):                        # full largest bucket: cut now
+        sched.submit(DiffusionRequest(request_id=i, seed=i), now=11.0)
+    assert sched.ready(now=11.0)
+    plan = sched.form_batch(now=11.0)
+    assert plan.n_real == 4 and plan.bucket == 4 and plan.occupancy == 1.0
+
+
+def test_scheduler_deadline_and_flush():
+    sched = Scheduler(max_batch=8, max_wait_s=100.0, clock=lambda: 0.0)
+    sched.submit(DiffusionRequest(request_id=0, seed=0, deadline_s=2.0),
+                 now=0.0)
+    assert not sched.ready(now=1.0)
+    assert sched.ready(now=2.5)               # deadline pressure wins
+    # flush drains regardless of age
+    sched2 = Scheduler(max_batch=8, max_wait_s=100.0, clock=lambda: 0.0)
+    for i in range(3):
+        sched2.submit(DiffusionRequest(request_id=i, seed=i), now=0.0)
+    plan = sched2.form_batch(now=0.0, flush=True)
+    assert plan.n_real == 3 and plan.bucket == 4
+    assert len(sched2) == 0
+
+
+def test_scheduler_pad_to_max_signature():
+    sched = Scheduler(max_batch=8, pad_to_max=True)
+    sched.submit(DiffusionRequest(request_id=0, seed=0))
+    plan = sched.form_batch(flush=True)
+    assert plan.bucket == 8 and plan.n_real == 1
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+def test_padded_lanes_never_leak(dit_fns):
+    """A request's output is identical whether it runs alone (bucket 1)
+    or padded inside a larger bucket — and pad lanes are never returned."""
+    eng = make_engine(dit_fns, max_batch=4)
+    for i in range(3):
+        eng.submit(DiffusionRequest(request_id=i, seed=i))
+    batched = eng.run_batch()                 # 3 real lanes in bucket 4
+    assert [o.request_id for o in batched] == [0, 1, 2]
+    assert batched[0].bucket == 4
+    solo = []
+    for i in range(3):
+        eng.submit(DiffusionRequest(request_id=i, seed=i))
+        solo.extend(eng.run_batch())          # bucket 1, same seeds
+    assert solo[0].bucket == 1
+    for b, s in zip(batched, solo):
+        np.testing.assert_allclose(np.asarray(b.latents),
+                                   np.asarray(s.latents), atol=1e-5)
+
+
+def test_editing_request_noising_path(dit_fns):
+    cfg = dit_fns[0]
+    eng = make_engine(dit_fns, max_batch=4)
+    ref = synthetic.shapes_batch(jax.random.key(5), 1, size=SIZE,
+                                 channels=cfg.in_channels)[0]
+    strength = 0.4
+    eng.submit(DiffusionRequest(request_id=0, seed=7, init_latents=ref,
+                                edit_strength=strength))
+    plan = eng.scheduler.form_batch(flush=True)
+    x_init = eng.build_x_init(plan)
+    assert x_init.shape[0] == 1               # bucket 1 for a lone request
+    noise = jax.random.normal(jax.random.key(7), eng.latent_shape)
+    want = schedule.add_noise(ref.astype(noise.dtype), noise, strength)
+    np.testing.assert_allclose(np.asarray(x_init[0]), np.asarray(want),
+                               atol=1e-6)
+    out = eng._execute(plan)
+    assert jnp.isfinite(out[0].latents).all()
+
+
+def test_padding_lanes_are_zero_noise(dit_fns):
+    eng = make_engine(dit_fns, max_batch=4)
+    for i in range(3):
+        eng.submit(DiffusionRequest(request_id=i, seed=i))
+    plan = eng.scheduler.form_batch(flush=True)
+    x_init = eng.build_x_init(plan)
+    assert x_init.shape[0] == 4 and plan.n_real == 3
+    np.testing.assert_array_equal(np.asarray(x_init[3]), 0.0)
+
+
+def test_no_recompile_across_mixed_sizes(dit_fns):
+    """Warmup compiles one executable per bucket; serving any mix of
+    batch sizes afterwards never grows the jit cache."""
+    eng = make_engine(dit_fns, max_batch=4)
+    eng.warmup()
+    assert eng.compiled_buckets() == len(eng.buckets) == 3
+    warm_misses = eng.metrics.compile_misses
+    rid = 0
+    for _ in range(2):                        # two rounds of mixed sizes
+        for burst in (1, 3, 4, 2):
+            for _ in range(burst):
+                eng.submit(DiffusionRequest(request_id=rid, seed=rid))
+                rid += 1
+            out = eng.run_batch()
+            assert len(out) == burst
+    # jit cache probe: still exactly one executable per bucket
+    assert eng.compiled_buckets() == len(eng.buckets)
+    assert eng.metrics.compile_misses == warm_misses
+    assert eng.metrics.compile_hits >= 8
+    assert eng.metrics.summary()["mean_occupancy"] <= 1.0
+
+
+def test_deferred_formation_through_engine(dit_fns):
+    eng = make_engine(dit_fns, max_batch=4, max_wait_s=30.0)
+    eng.scheduler.clock = lambda: 0.0
+    eng.submit(DiffusionRequest(request_id=0, seed=0), now=0.0)
+    assert eng.run_batch(flush=False, now=5.0) == []    # held back
+    out = eng.run_batch(flush=False, now=31.0)          # age triggers
+    assert len(out) == 1 and out[0].queue_wait_s == pytest.approx(31.0)
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_metrics_percentiles_and_summary():
+    m = metrics_lib.ServeMetrics()
+    for w in [0.1, 0.2, 0.3, 0.4, 1.0]:
+        m.observe_batch(bucket=4, n_real=2, wall_s=w, n_full=2, n_steps=10)
+    m.observe_request(0.0, 0.5)
+    m.observe_compile(hit=False)
+    m.observe_compile(hit=True)
+    m.observe_queue_depth(3)
+    s = m.summary()
+    assert s["batch_wall_p50_s"] == 0.3
+    assert s["batch_wall_p95_s"] == 1.0
+    assert s["mean_occupancy"] == 0.5
+    assert s["full_step_fraction"] == 0.2
+    assert s["compile_hits"] == 1 and s["compile_misses"] == 1
+    assert s["max_queue_depth"] == 3
+    assert metrics_lib.throughput(m, 2.0) == 0.5
