@@ -69,7 +69,12 @@ def main(argv=None) -> None:
         n_requests=12 if args.smoke else 24,
         max_batch=4 if args.smoke else 8)
     csv.append("serve_throughput,0,bucketed_speedup=%s"
-               % sv[-1]["speedup_vs_padmax"])
+               % sv[1]["speedup_vs_padmax"])
+    svm = serve_throughput.run_mixed(
+        n_requests=9 if args.smoke else 12,
+        max_batch=4 if args.smoke else 8)
+    csv.append("serve_mixed,0,lane_spread=%s"
+               % svm[0]["max_lane_full_spread"])
     try:
         rl = roofline.run()
         csv.append("roofline,0,combos=%d" % len(rl))

@@ -38,7 +38,7 @@ def run(method: str = "dct", title: str = "Table 1 — FLUX.1-dev-like (DCT)",
                                   base["flops"]))
 
     for interval in (3, 5, 7, 10):
-        for kind in ("fora", "taylorseer", "freqca"):
+        for kind in ("fora", "taylorseer", "foca", "freqca"):
             pol = CachePolicy(kind=kind, interval=interval, method=method,
                               rho=0.0625, high_order=2)
             res = B.run_policy(cfg, full_fn, from_crf_fn, pol, x0)

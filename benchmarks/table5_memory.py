@@ -31,6 +31,7 @@ def run(out: str = "results/bench/table5.json"):
         ("TaylorSeer CRF", CachePolicy(kind="taylorseer", high_order=2),
          False),
         ("FORA CRF", CachePolicy(kind="fora"), False),
+        ("FoCa CRF", CachePolicy(kind="foca", high_order=2), False),
         ("FreqCa (ours)", CachePolicy(kind="freqca", high_order=2), False),
     ]:
         if layerwise:
@@ -41,7 +42,9 @@ def run(out: str = "results/bench/table5.json"):
             units = 2 * pol.k_high * n_layers
         else:
             state = cache_lib.init_state(pol, feat, dtype=jnp.bfloat16)
-            nbytes = cache_lib.cache_bytes(state)
+            # policy-aware: the dummy low_hist slot kept for static
+            # shapes must not inflate the Table-5 memory numbers
+            nbytes = cache_lib.cache_bytes(state, pol)
             units = pol.cache_units
         rows.append({
             "method": name,

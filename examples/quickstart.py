@@ -2,16 +2,23 @@
 FreqCa at 5x scheduled compute saving and compare with the uncached
 output.
 
+Cache policies are self-contained objects from the registry
+(``repro.core.policies``); the ``CachePolicy`` spec resolves to one, or
+a policy object can be passed to the sampler directly — both shown.
+
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
 import repro.configs as config_lib
+from repro.core import policies
 from repro.core.cache import CachePolicy
 from repro.diffusion import sampler, schedule
 from repro.launch.train import train_dit
 from repro.models import dit
+
+print("registered cache policies:", ", ".join(policies.available()))
 
 cfg = config_lib.get_config("dit-small")
 params = train_dit(cfg, steps=120, batch=16, ckpt_dir="", size=32)
@@ -34,9 +41,11 @@ crf_shape = (4, (32 // cfg.patch_size) ** 2, cfg.d_model)
 
 full = sampler.sample(full_fn, from_crf_fn, x0, ts,
                       CachePolicy(kind="none"), crf_shape=crf_shape)
-freqca = sampler.sample(full_fn, from_crf_fn, x0, ts,
-                        CachePolicy(kind="freqca", interval=5,
-                                    method="dct", rho=0.0625),
+# a CachePolicy spec resolves to the registered object; building the
+# policy object directly is equivalent:
+pol = policies.FreqCaPolicy(interval=5, method="dct", rho=0.0625)
+assert CachePolicy(kind="freqca", interval=5).resolve() == pol
+freqca = sampler.sample(full_fn, from_crf_fn, x0, ts, pol,
                         crf_shape=crf_shape)
 err = float(jnp.linalg.norm(freqca.x - full.x) / jnp.linalg.norm(full.x))
 print(f"uncached: {int(full.n_full)} full steps; "

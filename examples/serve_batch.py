@@ -3,6 +3,11 @@ mixed-size stream of generation + editing requests through the
 continuous-batching FreqCa DiffusionEngine — per-bucket precompiled
 executables, age-based batch formation, metrics report.
 
+Requests carry per-request cache policies (freqca / fora / freqca_a
+cycling), so lanes sharing a batch follow their own activation
+schedules, and arrivals follow an open-loop Poisson process so the
+batch former works under real queueing.
+
   PYTHONPATH=src python examples/serve_batch.py
 """
 from repro.launch import serve
@@ -11,5 +16,6 @@ if __name__ == "__main__":
     import sys
     sys.argv = [sys.argv[0], "--requests", "16", "--interval", "5",
                 "--steps", "50", "--train-steps", "120", "--batch", "8",
-                "--edit-every", "5"]
+                "--edit-every", "5", "--mixed-policies",
+                "--arrival", "poisson", "--rate", "2.0"]
     serve.main()

@@ -1,13 +1,14 @@
-"""Feature-cache state machines: FreqCa and the baselines it unifies.
+"""Legacy feature-cache API: the ``CachePolicy`` spec + function-style
+state machines.
 
-All policies share one jit-friendly interface so the diffusion sampler
-can swap them statically:
-
-* ``init_state(policy, feat_shape, dtype)`` -> pytree of static shapes
-* ``should_activate(policy, state, step_idx)`` -> bool scalar (traced)
-* ``update(policy, state, z, t)``  — ran on *activated* (full-compute)
-  steps; pushes the fresh CRF into the history ring.
-* ``predict(policy, state, t)``    — ran on cached steps; returns ẑ_t.
+The sampler now drives self-contained policy *objects* registered in
+``repro.core.policies`` (per-lane activation masks, policy-owned
+adaptive state).  ``CachePolicy`` remains the user-facing spec — a thin
+compat shim whose ``.resolve()`` returns the registered policy object
+for its ``kind`` — and the function-style API below (``init_state`` /
+``should_activate`` / ``update`` / ``predict``) is kept for the
+layer-wise Table-5/Fig-4 ablations, the roofline step specs, and the
+golden-equivalence tests that pin the new objects against it.
 
 Policies (``kind``):
   freqca      — paper: low band reused (order ``low_order``, default 0),
@@ -24,6 +25,9 @@ Policies (``kind``):
                 steps and triggers a full forward when it crosses
                 ``tea_threshold`` (the interval schedule is ignored);
                 prediction = reuse, like FORA.
+  foca        — forecast-then-calibrate (arXiv 2508.16211): in this
+                legacy API it degrades to the taylorseer forecast; the
+                registry object carries the per-lane calibration gain.
   freqca_a    — beyond-paper ADAPTIVE FreqCa: at every activated step
                 the cache state already contains what FreqCa *would
                 have predicted* for that step — its relative error
@@ -76,9 +80,14 @@ class CachePolicy:
             return 0
         if self.kind in ("fora", "teacache"):
             return 1
-        if self.kind == "taylorseer":
+        if self.kind in ("taylorseer", "foca"):
             return self.k_high
         return self.k_low + self.k_high   # freqca / freqca_a
+
+    def resolve(self):
+        """Registered policy object for this spec (repro.core.policies)."""
+        from repro.core.policies import registry
+        return registry.resolve(self)
 
 
 class CacheState(NamedTuple):
@@ -94,7 +103,7 @@ def init_state(policy: CachePolicy, feat_shape: Tuple[int, ...],
     kl, kh = policy.k_low, policy.k_high
     if policy.kind in ("fora", "teacache"):
         kl, kh = 1, 1
-    if policy.kind in ("taylorseer", "none"):
+    if policy.kind in ("taylorseer", "foca", "none"):
         kl = 1  # unused slot kept tiny-but-static
     return CacheState(
         low_hist=jnp.zeros((kl,) + tuple(feat_shape), dtype),
@@ -108,7 +117,7 @@ def init_state(policy: CachePolicy, feat_shape: Tuple[int, ...],
 def _needed_history(policy: CachePolicy) -> int:
     if policy.kind in ("fora", "teacache"):
         return 1
-    if policy.kind == "taylorseer":
+    if policy.kind in ("taylorseer", "foca"):
         return policy.k_high
     if policy.kind in ("freqca", "freqca_a"):
         return max(policy.k_low, policy.k_high)
@@ -135,7 +144,7 @@ def update(policy: CachePolicy, state: CacheState, z: jnp.ndarray,
     """Push the freshly computed CRF ``z`` (activated step at time t)."""
     if policy.kind == "none":
         return state
-    if policy.kind in ("fora", "taylorseer", "teacache"):
+    if policy.kind in ("fora", "taylorseer", "foca", "teacache"):
         low, high = jnp.zeros_like(z), z
     else:  # freqca / freqca_a
         bands = frequency.decompose(z, policy.rho, policy.method,
@@ -152,7 +161,9 @@ def predict(policy: CachePolicy, state: CacheState, t) -> jnp.ndarray:
     """Reconstruct ẑ_t from the cache (cached step at time t)."""
     if policy.kind in ("fora", "teacache"):
         return state.high_hist[-1]
-    if policy.kind == "taylorseer":
+    if policy.kind in ("taylorseer", "foca"):
+        # legacy path has no per-lane gain state: foca degrades to the
+        # uncalibrated forecast (the registry object is the real thing)
         return hermite.predict(state.ts_high, state.high_hist, t,
                                policy.high_order)
     assert policy.kind in ("freqca", "freqca_a"), policy.kind
@@ -169,8 +180,24 @@ def predict(policy: CachePolicy, state: CacheState, t) -> jnp.ndarray:
     return low + high
 
 
-def cache_bytes(state: CacheState) -> int:
-    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(state))
+def cache_bytes(state: CacheState, policy: CachePolicy = None) -> int:
+    """Bytes the policy actually caches.
+
+    ``init_state`` keeps a tiny-but-static dummy ``low_hist`` slot for
+    the kinds that never decompose (``update`` pushes zeros into it), so
+    a plain pytree sum over-reports those policies.  Pass ``policy`` to
+    exclude the dummy slots (Table-5 memory accounting); without it the
+    raw pytree size is returned (allocation footprint).
+    """
+    total = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(state))
+    if policy is None:
+        return total
+    if policy.kind == "none":
+        return 0
+    if policy.kind in ("fora", "taylorseer", "foca", "teacache"):
+        return total - (state.low_hist.size * state.low_hist.dtype.itemsize
+                        + state.ts_low.size * state.ts_low.dtype.itemsize)
+    return total
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,20 @@
+"""Registry of self-contained cache-policy objects (FreqCa + family).
+
+Policies implement the four-method protocol in :mod:`.base` and register
+a ``spec -> Policy`` factory in :mod:`.registry`; the diffusion sampler
+drives them through a per-lane :class:`~.registry.PolicyBank` and never
+dispatches on policy names.  ``repro.core.cache.CachePolicy`` remains
+the user-facing spec; ``.resolve()`` turns it into the registered
+object.
+"""
+from repro.core.policies.base import (Policy, Ring, StepContext,  # noqa: F401
+                                      lane_select)
+from repro.core.policies.foca import FoCaPolicy  # noqa: F401
+from repro.core.policies.fora import ForaPolicy  # noqa: F401
+from repro.core.policies.freqca import FreqCaPolicy  # noqa: F401
+from repro.core.policies.freqca_a import FreqCaAdaptivePolicy  # noqa: F401
+from repro.core.policies.none import NoCachePolicy  # noqa: F401
+from repro.core.policies.registry import (PolicyBank, available,  # noqa: F401
+                                          bank, register, resolve)
+from repro.core.policies.taylorseer import TaylorSeerPolicy  # noqa: F401
+from repro.core.policies.teacache import TeaCachePolicy  # noqa: F401

@@ -1,0 +1,173 @@
+"""Cache-policy protocol: self-contained, jit-friendly policy objects.
+
+A policy owns *all* of its state — including the adaptive carries that
+used to live inside the sampler loop (TeaCache's accumulator, FreqCa-A's
+skip counter and last-error scalar) — behind four methods:
+
+* ``init(batch, feat_shape, ...)``  -> lane-major state pytree
+* ``decide(state, ctx)``            -> ``(state, [B] bool mask)``
+* ``update(state, crf, ctx)``       -> state with the fresh CRF pushed
+* ``predict(state, ctx)``           -> ẑ_t reconstructed from the cache
+
+``decide`` runs on *every* step and returns a **per-lane** activation
+mask, so two requests sharing a serving batch can follow different
+schedules (no more batch-global activation decisions).  Because the
+sampler commits to executing exactly the returned mask, mask-dependent
+bookkeeping (accumulator resets, skip counters) is applied inside
+``decide``; ``update`` is merged back only into the activated lanes.
+
+Every state leaf is **lane-major** (``[B, ...]``) so the sampler can
+select per lane with a single broadcasted ``jnp.where`` (``lane_select``).
+
+Policies are frozen dataclasses: hashable and compared by value, so a
+policy instance (or a per-lane tuple of instances) can key a jit cache —
+the serving engine compiles one executable per (bucket, lane-policy)
+signature.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hermite
+
+
+class StepContext(NamedTuple):
+    """Per-step observation handed to the policy inside the sampler scan.
+
+    Array fields are traced; ``batch`` / ``feat_shape`` / ``crf_dtype``
+    are static python values (rebuilt each step, never part of the
+    scan carry).
+    """
+    step_idx: jnp.ndarray          # [] int32 — index into the ts grid
+    t_now: jnp.ndarray             # [] — current diffusion time
+    x: jnp.ndarray                 # [B, *latent] — model input this step
+    batch: int
+    feat_shape: Tuple[int, ...]    # per-lane CRF feature shape
+    crf_dtype: Any = jnp.float32
+
+    def lane(self, j: int) -> "StepContext":
+        """View of this context restricted to lane ``j``."""
+        return self._replace(x=self.x[j:j + 1], batch=1)
+
+
+class Ring(NamedTuple):
+    """Lane-major ring of the K most recent activated features."""
+    vals: jnp.ndarray              # [B, K, *feat]
+    ts: jnp.ndarray                # [B, K] activation timestamps
+
+
+def ring_init(batch: int, k: int, feat_shape: Tuple[int, ...],
+              dtype=jnp.float32) -> Ring:
+    return Ring(vals=jnp.zeros((batch, k) + tuple(feat_shape), dtype),
+                ts=jnp.full((batch, k), -1.0, jnp.float32))
+
+
+def ring_push(ring: Ring, value: jnp.ndarray, t) -> Ring:
+    """Push a ``[B, *feat]`` value observed at scalar time ``t``."""
+    vals = jnp.roll(ring.vals, -1, axis=1).at[:, -1].set(
+        value.astype(ring.vals.dtype))
+    ts = jnp.roll(ring.ts, -1, axis=1).at[:, -1].set(
+        jnp.asarray(t, jnp.float32))
+    return Ring(vals=vals, ts=ts)
+
+
+def ring_last(ring: Ring) -> jnp.ndarray:
+    """Most recent cached value per lane -> [B, *feat] (order-0 reuse)."""
+    return ring.vals[:, -1]
+
+
+def ring_predict(ring: Ring, t_query, order: int) -> jnp.ndarray:
+    """Per-lane Hermite forecast at ``t_query`` -> [B, *feat].
+
+    Lanes activate at different times under per-lane schedules, so each
+    lane carries its own timestamps and gets its own fit (vmapped; the
+    solve is a tiny (m+1)x(m+1) system per lane).
+    """
+    return jax.vmap(
+        lambda ts, vals: hermite.predict(ts, vals, t_query, order)
+    )(ring.ts, ring.vals)
+
+
+def lane_select(mask: jnp.ndarray, new, old):
+    """Per-lane pytree merge: lane ``j`` takes ``new`` where ``mask[j]``."""
+    def sel(n, o):
+        m = mask.reshape(mask.shape + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+    return jax.tree.map(sel, new, old)
+
+
+def lane_mean_abs(x: jnp.ndarray) -> jnp.ndarray:
+    """mean |x| per lane over all non-batch axes -> [B] float32."""
+    return jnp.mean(jnp.abs(x.astype(jnp.float32)),
+                    axis=tuple(range(1, x.ndim)))
+
+
+def lane_rel_norm(pred: jnp.ndarray, target: jnp.ndarray) -> jnp.ndarray:
+    """Per-lane relative L2 error ||pred − target|| / ||target|| -> [B]."""
+    axes = tuple(range(1, target.ndim))
+    p = pred.astype(jnp.float32)
+    t = target.astype(jnp.float32)
+    num = jnp.sqrt(jnp.sum(jnp.square(p - t), axis=axes))
+    den = jnp.sqrt(jnp.sum(jnp.square(t), axis=axes))
+    return num / jnp.maximum(den, 1e-6)
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """Base cache policy: scheduled activation every ``interval`` steps
+    plus a warm-up of full steps until ``needed_history`` entries exist.
+
+    Subclasses override ``init``/``update``/``predict`` (and ``decide``
+    for adaptive policies).  The default ``decide`` assumes the state
+    has an ``n_valid: [B] int32`` field — the per-lane count of
+    activated steps — which every shipped policy state carries.
+    """
+    interval: int = 5
+
+    name: ClassVar[str] = "abstract"
+    # True when decide() can return lane-varying masks (adaptive
+    # policies); False lets the sampler keep the scalar lax.cond path.
+    per_lane: ClassVar[bool] = False
+
+    # --- protocol --------------------------------------------------------
+    def init(self, batch: int, feat_shape: Tuple[int, ...],
+             crf_dtype=jnp.float32, latent_shape: Tuple[int, ...] = (),
+             latent_dtype=jnp.float32):
+        raise NotImplementedError
+
+    def decide(self, state, ctx: StepContext):
+        """-> (state, [B] bool mask).  Runs every step."""
+        scheduled = (ctx.step_idx % self.interval) == 0
+        warm = state.n_valid < self.needed_history
+        return state, jnp.broadcast_to(scheduled, warm.shape) | warm
+
+    def update(self, state, crf: jnp.ndarray, ctx: StepContext):
+        """Push the freshly computed CRF (activated lanes only — the
+        sampler merges the result back under the decide mask)."""
+        raise NotImplementedError
+
+    def predict(self, state, ctx: StepContext) -> jnp.ndarray:
+        """Reconstruct ẑ_t from the cache (cached lanes)."""
+        raise NotImplementedError
+
+    # --- metadata --------------------------------------------------------
+    @property
+    def needed_history(self) -> int:
+        """Activated steps required before prediction is well-posed —
+        drives the warm-up length (no hard-coded constants)."""
+        return 1
+
+    @property
+    def cache_units(self) -> int:
+        """Feature-sized tensors held per lane (paper §4.4.1)."""
+        return 1
+
+    def state_bytes(self, state) -> int:
+        """Actual cache footprint — policy states hold no dummy slots,
+        so this is exact by construction."""
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(state))

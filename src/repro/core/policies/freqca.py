@@ -1,0 +1,79 @@
+"""FreqCa (the paper's policy): frequency-split CRF caching.
+
+The cached Cumulative Residual Feature is decomposed into a low band —
+reused directly (order ``low_order``, default 0) or Hermite-predicted —
+and a high band forecast with an order-``high_order`` Hermite fit over
+the ``k_high`` most recent activated steps (paper §3.2, eq. 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import frequency
+from repro.core.policies import base, registry
+
+
+class FreqCaState(NamedTuple):
+    low: base.Ring                 # [B, K_low,  *feat] spatial low band
+    high: base.Ring                # [B, K_high, *feat] spatial high band
+    n_valid: jnp.ndarray           # [B] int32 — activated steps per lane
+
+
+@dataclasses.dataclass(frozen=True)
+class FreqCaPolicy(base.Policy):
+    name = "freqca"
+
+    method: str = "dct"            # fft | dct | none
+    rho: float = 0.0625            # low-frequency fraction of the spectrum
+    low_order: int = 0             # 0 = direct reuse (paper default)
+    high_order: int = 2            # Hermite order for the high band
+    token_axis: int = 1            # token axis of the per-lane [B, S, D] CRF
+
+    @property
+    def k_low(self) -> int:
+        return self.low_order + 1
+
+    @property
+    def k_high(self) -> int:
+        return self.high_order + 1
+
+    @property
+    def needed_history(self) -> int:
+        return max(self.k_low, self.k_high)
+
+    @property
+    def cache_units(self) -> int:
+        return self.k_low + self.k_high
+
+    def init(self, batch: int, feat_shape: Tuple[int, ...],
+             crf_dtype=jnp.float32, **_):
+        return FreqCaState(
+            low=base.ring_init(batch, self.k_low, feat_shape, crf_dtype),
+            high=base.ring_init(batch, self.k_high, feat_shape, crf_dtype),
+            n_valid=jnp.zeros((batch,), jnp.int32))
+
+    def update(self, state, crf, ctx):
+        bands = frequency.decompose(crf, self.rho, self.method,
+                                    axis=self.token_axis)
+        return state._replace(
+            low=base.ring_push(state.low, bands.low, ctx.t_now),
+            high=base.ring_push(state.high, bands.high, ctx.t_now),
+            n_valid=state.n_valid + 1)
+
+    def predict(self, state, ctx):
+        low = (base.ring_last(state.low) if self.low_order == 0 else
+               base.ring_predict(state.low, ctx.t_now, self.low_order))
+        high = (base.ring_last(state.high) if self.high_order == 0 else
+                base.ring_predict(state.high, ctx.t_now, self.high_order))
+        return low + high
+
+
+@registry.register("freqca")
+def _from_spec(spec) -> FreqCaPolicy:
+    return FreqCaPolicy(interval=spec.interval, method=spec.method,
+                        rho=spec.rho, low_order=spec.low_order,
+                        high_order=spec.high_order,
+                        token_axis=spec.token_axis)

@@ -1,0 +1,172 @@
+"""Policy registry + per-lane policy banks.
+
+``register(name)`` decorates a factory ``spec -> Policy`` so new
+policies (FoCa, SpectralCache, ...) plug in without touching the
+sampler.  ``resolve`` accepts a registered name's spec (the legacy
+``repro.core.cache.CachePolicy`` dataclass, dispatched on ``.kind``) or
+an already-built :class:`~repro.core.policies.base.Policy` instance.
+
+``bank(policy, batch)`` turns a policy — or a per-lane sequence of
+policies — into a :class:`PolicyBank`, the object the sampler actually
+drives.  A bank exposes the same four-method protocol batched over
+lanes plus two static flags:
+
+* ``scalar_decision`` — the mask is batch-uniform by construction
+  (single non-adaptive policy), so the sampler may branch with a scalar
+  ``lax.cond`` and skip the per-lane select entirely (the seed fast
+  path, preserved bit-for-bit).
+* ``always_full`` — every lane is the ``none`` policy; no branch at all.
+
+Mixed banks hold one state pytree per lane (static tuple — fine at
+serving batch sizes) so lanes with different policies, and therefore
+different state *structures*, share one compiled executable.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+
+from repro.core.policies import base
+
+_FACTORIES: Dict[str, Callable] = {}
+
+
+def register(name: str):
+    """Decorator: register a ``spec -> Policy`` factory under ``name``."""
+    def deco(factory: Callable) -> Callable:
+        _FACTORIES[name] = factory
+        return factory
+    return deco
+
+
+def _ensure_builtin() -> None:
+    # import for registration side effects; lazy to avoid import cycles
+    from repro.core.policies import (foca, fora, freqca, freqca_a,  # noqa: F401
+                                     none, taylorseer, teacache)
+
+
+def available() -> Tuple[str, ...]:
+    _ensure_builtin()
+    return tuple(sorted(_FACTORIES))
+
+
+def resolve(policy) -> base.Policy:
+    """Spec (``.kind``-dispatched) or Policy instance -> Policy instance."""
+    if isinstance(policy, base.Policy):
+        return policy
+    kind = getattr(policy, "kind", None)
+    if kind is None:
+        raise TypeError(
+            f"expected a Policy or a spec with a .kind, got {policy!r}")
+    _ensure_builtin()
+    if kind not in _FACTORIES:
+        raise KeyError(f"unknown cache policy {kind!r}; "
+                       f"registered: {available()}")
+    return _FACTORIES[kind](policy)
+
+
+# ---------------------------------------------------------------------------
+# per-lane banks
+# ---------------------------------------------------------------------------
+
+class PolicyBank:
+    """Per-lane policy assignment for one sampler batch (abstract)."""
+    scalar_decision: bool
+    always_full: bool
+    batch: int
+
+    def init(self, feat_shape, crf_dtype, latent_shape, latent_dtype):
+        raise NotImplementedError
+
+    def decide(self, state, ctx: base.StepContext):
+        raise NotImplementedError
+
+    def apply_update(self, state, crf, ctx: base.StepContext, mask):
+        """Push ``crf`` and merge the result into the masked lanes."""
+        raise NotImplementedError
+
+    def predict(self, state, ctx: base.StepContext):
+        raise NotImplementedError
+
+
+class UniformBank(PolicyBank):
+    """Every lane runs the same policy; state is batched in one pytree."""
+
+    def __init__(self, policy: base.Policy, batch: int):
+        self.policy = policy
+        self.batch = batch
+        self.scalar_decision = not policy.per_lane
+        self.always_full = policy.name == "none"
+
+    def init(self, feat_shape, crf_dtype, latent_shape, latent_dtype):
+        return self.policy.init(self.batch, feat_shape, crf_dtype,
+                                latent_shape=latent_shape,
+                                latent_dtype=latent_dtype)
+
+    def decide(self, state, ctx):
+        return self.policy.decide(state, ctx)
+
+    def apply_update(self, state, crf, ctx, mask):
+        new = self.policy.update(state, crf, ctx)
+        if self.scalar_decision:
+            # the sampler only enters the full branch when the (uniform)
+            # mask is True, so every lane activated — no select needed
+            return new
+        return base.lane_select(mask, new, state)
+
+    def predict(self, state, ctx):
+        return self.policy.predict(state, ctx)
+
+
+class MixedBank(PolicyBank):
+    """One policy per lane; state is a static tuple of lane-1 pytrees."""
+
+    def __init__(self, policies: Sequence[base.Policy]):
+        self.policies = tuple(policies)
+        self.batch = len(self.policies)
+        self.scalar_decision = False
+        self.always_full = all(p.name == "none" for p in self.policies)
+
+    def init(self, feat_shape, crf_dtype, latent_shape, latent_dtype):
+        return tuple(p.init(1, feat_shape, crf_dtype,
+                            latent_shape=latent_shape,
+                            latent_dtype=latent_dtype)
+                     for p in self.policies)
+
+    def decide(self, state, ctx):
+        states, masks = [], []
+        for j, pol in enumerate(self.policies):
+            st, m = pol.decide(state[j], ctx.lane(j))
+            states.append(st)
+            masks.append(m)
+        return tuple(states), jnp.concatenate(masks)
+
+    def apply_update(self, state, crf, ctx, mask):
+        out = []
+        for j, pol in enumerate(self.policies):
+            new = pol.update(state[j], crf[j:j + 1], ctx.lane(j))
+            out.append(base.lane_select(mask[j:j + 1], new, state[j]))
+        return tuple(out)
+
+    def predict(self, state, ctx):
+        return jnp.concatenate([
+            pol.predict(state[j], ctx.lane(j))
+            for j, pol in enumerate(self.policies)])
+
+
+PolicyLike = Union[base.Policy, object]
+
+
+def bank(policy: Union[PolicyLike, Sequence[PolicyLike]],
+         batch: int) -> PolicyBank:
+    """Policy / spec / per-lane sequence thereof -> PolicyBank."""
+    if isinstance(policy, (list, tuple)):
+        lanes = tuple(resolve(p) for p in policy)
+        if len(lanes) != batch:
+            raise ValueError(f"got {len(lanes)} lane policies for "
+                             f"batch {batch}")
+        if all(p == lanes[0] for p in lanes):
+            return UniformBank(lanes[0], batch)
+        return MixedBank(lanes)
+    return UniformBank(resolve(policy), batch)

@@ -1,9 +1,22 @@
-"""Diffusion sampling loop with pluggable feature-cache policy.
+"""Diffusion sampling loop, policy-agnostic with per-lane activation.
 
-The whole sampler is one ``lax.scan`` over timesteps; each step is a
-``lax.cond`` between the *activated* branch (full denoiser forward +
-cache update) and the *cached* branch (FreqCa/baseline prediction of the
-CRF + the final layer only).  One compiled program regardless of policy.
+The whole sampler is one ``lax.scan`` over timesteps.  The cache policy
+is a self-contained object from ``repro.core.policies`` (or a legacy
+``CachePolicy`` spec, or a per-lane sequence of either — one policy per
+batch lane), driven through the four-method bank protocol; the sampler
+never dispatches on policy names.
+
+Each step the bank's ``decide`` returns a per-lane activation mask:
+
+* batch-uniform mask (single non-adaptive policy) — scalar ``lax.cond``
+  between the full branch (denoiser forward + cache update) and the
+  cached branch (CRF prediction + final layer only): the seed fast
+  path, one compiled program, full skip-compute win;
+* lane-varying mask (adaptive policies / mixed banks) — the full
+  forward runs iff *any* lane activates (``lax.cond``), and each lane's
+  velocity and cache state are selected per lane with ``jnp.where``, so
+  a mixed generation+editing batch never shares one global activation
+  decision.  A lane behaves exactly as it would alone in the batch.
 
 The denoiser is abstract: ``full_fn(x, t) -> (velocity, crf)`` and
 ``from_crf_fn(crf, t) -> velocity``; both DiT and backbone-wrapped
@@ -11,93 +24,86 @@ assigned architectures plug in (repro.models.dit).
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import Callable, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import cache as cache_lib
-from repro.core.cache import CachePolicy
+from repro.core.policies import base as policy_base
+from repro.core.policies import registry as policy_registry
+
+PolicyArg = Union[object, Sequence[object]]   # Policy | spec | per-lane seq
 
 
 class SampleResult(NamedTuple):
     x: jnp.ndarray                  # final latents
-    n_full: jnp.ndarray             # number of activated (full) steps
+    n_full: jnp.ndarray             # [] — batch forwards (compute) count
+    n_full_lanes: Optional[jnp.ndarray] = None   # [B] activated steps/lane
     trajectory: Optional[jnp.ndarray] = None
 
 
 def sample(full_fn: Callable, from_crf_fn: Callable, x_init: jnp.ndarray,
-           ts: jnp.ndarray, policy: CachePolicy,
+           ts: jnp.ndarray, policy: PolicyArg,
            crf_shape: Tuple[int, ...], crf_dtype=jnp.float32,
            return_trajectory: bool = False) -> SampleResult:
     """Euler rectified-flow sampling from t=1 to t=0 under a cache policy.
 
-    ts: [n_steps+1] decreasing times.  crf_shape: shape of the CRF
-    feature (needed to build the static cache state).
+    ts: [n_steps+1] decreasing times.  crf_shape: [B, *feat] shape of the
+    CRF feature (needed to build the static cache state).  ``policy``
+    may be a Policy object, a CachePolicy spec, or a per-lane sequence
+    of them (len == batch) for mixed-policy batches.
     """
     n_steps = ts.shape[0] - 1
-    state0 = cache_lib.init_state(policy, crf_shape, crf_dtype)
-    # adaptive carries: (accumulator, previous input, steps-since-full,
-    # last measured prediction error)
-    tea0 = (jnp.zeros((), jnp.float32), jnp.zeros_like(x_init),
-            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32))
+    batch = x_init.shape[0]
+    feat_shape = tuple(crf_shape[1:])
+    bank = policy_registry.bank(policy, batch)
+    state0 = bank.init(feat_shape, crf_dtype,
+                       latent_shape=x_init.shape[1:],
+                       latent_dtype=x_init.dtype)
 
     def step(carry, inp):
-        x, state, tea = carry
+        x, state = carry
         i, t_now, t_next = inp
-        acc, prev_x, since, err_last = tea
+        ctx = policy_base.StepContext(step_idx=i, t_now=t_now, x=x,
+                                      batch=batch, feat_shape=feat_shape,
+                                      crf_dtype=crf_dtype)
+        state, mask = bank.decide(state, ctx)
 
         def full_branch(op):
             x_, state_ = op
-            v, crf = full_fn(x_, t_now)
-            if policy.kind == "freqca_a":
-                # the prediction FreqCa would have made for THIS step is
-                # free to score against the fresh CRF (self-calibration)
-                pred = cache_lib.predict(policy, state_, t_now)
-                err = jnp.linalg.norm((pred - crf).astype(jnp.float32)) /                     jnp.maximum(jnp.linalg.norm(crf.astype(jnp.float32)),
-                                1e-6)
-            else:
-                err = jnp.zeros((), jnp.float32)
-            return v, cache_lib.update(policy, state_, crf, t_now), 1, err
+            v_full, crf = full_fn(x_, t_now)
+            state_ = bank.apply_update(state_, crf, ctx, mask)
+            if bank.scalar_decision:
+                return v_full, state_
+            # lanes that did not activate keep their own schedule: they
+            # consume the cached prediction even though the batch paid
+            # for a forward (quality decoupling across lanes)
+            v_hat = from_crf_fn(bank.predict(state_, ctx), t_now)
+            m = mask.reshape((batch,) + (1,) * (v_full.ndim - 1))
+            return jnp.where(m, v_full, v_hat.astype(v_full.dtype)), state_
 
         def cached_branch(op):
             x_, state_ = op
-            crf_hat = cache_lib.predict(policy, state_, t_now)
-            return (from_crf_fn(crf_hat, t_now), state_, 0,
-                    jnp.zeros((), jnp.float32))
+            return from_crf_fn(bank.predict(state_, ctx), t_now), state_
 
-        if policy.kind == "teacache":
-            rel = jnp.mean(jnp.abs(x - prev_x)) / jnp.maximum(
-                jnp.mean(jnp.abs(prev_x)), 1e-6)
-            acc = acc + rel.astype(jnp.float32)
-            warm = state.n_valid < 1
-            act = warm | (acc > policy.tea_threshold) | (i == 0)
-            acc = jnp.where(act, 0.0, acc)
-        elif policy.kind == "freqca_a":
-            warm = state.n_valid < 3
-            # projected error of the NEXT cached step ~ (since+1)·err_last
-            projected = (since.astype(jnp.float32) + 1.0) * err_last
-            act = warm | (projected > policy.tea_threshold)
+        if bank.always_full:
+            act = jnp.asarray(True)
+            v, state = full_branch((x, state))
         else:
-            act = cache_lib.should_activate(policy, state, i)
-        if policy.kind == "none":
-            v, state, used, err_new = full_branch((x, state))
-        else:
-            v, state, used, err_new = jax.lax.cond(
-                act, full_branch, cached_branch, (x, state))
-        since = jnp.where(jnp.asarray(used, bool), 0, since + 1)
-        err_last = jnp.where(jnp.asarray(used, bool), err_new, err_last)
+            act = mask[0] if bank.scalar_decision else jnp.any(mask)
+            v, state = jax.lax.cond(act, full_branch, cached_branch,
+                                    (x, state))
         dt = (t_next - t_now).astype(x.dtype)
         x_new = x + dt * v.astype(x.dtype)
         out = (x_new if return_trajectory else (),
-               jnp.asarray(used, jnp.int32))
-        return (x_new, state, (acc, x, since, err_last)), out
+               jnp.asarray(act, jnp.int32), mask.astype(jnp.int32))
+        return (x_new, state), out
 
     idx = jnp.arange(n_steps)
-    (x, _, _), (traj, used) = jax.lax.scan(step, (x_init, state0, tea0),
-                                           (idx, ts[:-1], ts[1:]))
-    return SampleResult(x=x, n_full=jnp.sum(used),
+    (x, _), (traj, fwd, used) = jax.lax.scan(step, (x_init, state0),
+                                             (idx, ts[:-1], ts[1:]))
+    return SampleResult(x=x, n_full=jnp.sum(fwd),
+                        n_full_lanes=jnp.sum(used, axis=0),
                         trajectory=traj if return_trajectory else None)
 
 

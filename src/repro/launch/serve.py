@@ -7,7 +7,21 @@ scheduler/engine metrics (occupancy, p50/p95 latency, full-step
 fraction, compile cache), throughput, speedup vs the uncached engine,
 and output fidelity (PSNR vs uncached).
 
+Two client shapes:
+
+* closed loop (``--arrival burst``, default) — deterministic bursts,
+  each drained before the next arrives (the seed drivers' behaviour);
+* open loop (``--arrival poisson --rate R``) — requests arrive on a
+  Poisson process at R req/s regardless of server progress, so the
+  queue builds while the engine is busy and the age/deadline batch
+  former is exercised under real queueing.
+
+``--mixed-policies`` assigns per-request cache policies (freqca / fora
+/ freqca_a cycling) so lanes in one batch follow their own activation
+schedules.
+
   PYTHONPATH=src python -m repro.launch.serve --requests 16 --interval 5
+  PYTHONPATH=src python -m repro.launch.serve --arrival poisson --rate 2
 """
 from __future__ import annotations
 
@@ -35,26 +49,48 @@ def psnr(a, b, data_range=2.0):
     return 10.0 * np.log10(data_range ** 2 / mse)
 
 
+def _make_request(rid: int, size: int, channels: int, edit_every: int,
+                  policies=None) -> DiffusionRequest:
+    pol = policies[rid % len(policies)] if policies else None
+    if edit_every and rid % edit_every == edit_every - 1:
+        ref = synthetic.shapes_batch(jax.random.key(1000 + rid), 1,
+                                     size=size, channels=channels)[0]
+        return DiffusionRequest(request_id=rid, seed=rid, init_latents=ref,
+                                edit_strength=0.5, policy=pol)
+    return DiffusionRequest(request_id=rid, seed=rid, policy=pol)
+
+
 def mixed_stream(n_requests: int, size: int, channels: int,
-                 edit_every: int = 5):
+                 edit_every: int = 5, policies=None):
     """Deterministic mixed request stream: bursts of varying size, every
-    ``edit_every``-th request an editing request from a synthetic ref."""
+    ``edit_every``-th request an editing request from a synthetic ref;
+    optional per-request cache policies assigned round-robin."""
     reqs, rid = [], 0
     burst_sizes = itertools.cycle([1, 3, 8, 2, 4, 1])
     while rid < n_requests:
         burst = []
         for _ in range(min(next(burst_sizes), n_requests - rid)):
-            if edit_every and rid % edit_every == edit_every - 1:
-                ref = synthetic.shapes_batch(jax.random.key(1000 + rid), 1,
-                                             size=size, channels=channels)[0]
-                burst.append(DiffusionRequest(request_id=rid, seed=rid,
-                                              init_latents=ref,
-                                              edit_strength=0.5))
-            else:
-                burst.append(DiffusionRequest(request_id=rid, seed=rid))
+            burst.append(_make_request(rid, size, channels, edit_every,
+                                       policies))
             rid += 1
         reqs.append(burst)
     return reqs
+
+
+def poisson_stream(n_requests: int, rate: float, size: int, channels: int,
+                   edit_every: int = 5, policies=None, seed: int = 0):
+    """Open-loop arrival plan: ``[(arrival_s, request), ...]`` with
+    exponential inter-arrival times at ``rate`` req/s (deterministic for
+    a given ``seed``)."""
+    if rate <= 0:
+        raise ValueError(f"rate must be > 0, got {rate}")
+    rng = np.random.RandomState(seed)
+    t, plan = 0.0, []
+    for rid in range(n_requests):
+        t += float(rng.exponential(1.0 / rate))
+        plan.append((t, _make_request(rid, size, channels, edit_every,
+                                      policies)))
+    return plan
 
 
 def serve_stream(eng: DiffusionEngine, bursts) -> tuple:
@@ -70,6 +106,48 @@ def serve_stream(eng: DiffusionEngine, bursts) -> tuple:
     return outs, wall
 
 
+def cyclic_signatures(policies, max_batch: int):
+    """Every per-lane policy set a FIFO batch former can cut from a
+    round-robin assignment: windows of the policy cycle (any offset, any
+    real-lane count), padded to their bucket with the window's first
+    policy — the engine's padding rule.  Warming these makes open-loop
+    serving compile-free no matter where arrivals split the batches."""
+    from repro.serving.scheduler import bucket_for
+    seen, sets = set(), []
+    k = len(policies)
+    for off in range(k):
+        for n in range(1, max_batch + 1):
+            lanes = [policies[(off + i) % k] for i in range(n)]
+            lanes += [lanes[0]] * (bucket_for(n, max_batch) - n)
+            key = tuple(lanes)
+            if key not in seen:
+                seen.add(key)
+                sets.append(key)
+    return sets
+
+
+def serve_open_loop(eng: DiffusionEngine, plan, poll_s: float = 0.002):
+    """Replay a timestamped arrival plan in real time (open-loop client).
+
+    Arrivals are independent of server progress: the queue grows while
+    the engine is busy, so batches are cut by the scheduler's own
+    age/deadline pressure (``flush=False``) rather than drained — the
+    regime the closed-loop drivers never reach.
+    """
+    outs, i = [], 0
+    t0 = time.perf_counter()
+    while i < len(plan) or eng.scheduler.depth:
+        now = time.perf_counter() - t0
+        while i < len(plan) and plan[i][0] <= now:
+            eng.submit(plan[i][1], now=plan[i][0])
+            i += 1
+        served = eng.run_batch(flush=False, now=now)
+        outs.extend(served)
+        if not served:   # nothing ready: wait for arrivals/age, don't spin
+            time.sleep(poll_s)
+    return outs, time.perf_counter() - t0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=16)
@@ -83,6 +161,14 @@ def main():
                     help="age threshold for batch formation (s)")
     ap.add_argument("--edit-every", type=int, default=5,
                     help="every Nth request is an editing request (0=off)")
+    ap.add_argument("--arrival", default="burst",
+                    choices=["burst", "poisson"],
+                    help="closed-loop bursts or open-loop Poisson client")
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="Poisson arrival rate (req/s) for --arrival poisson")
+    ap.add_argument("--mixed-policies", action="store_true",
+                    help="cycle per-request policies (freqca/fora/freqca_a)"
+                         " — lanes in one batch keep their own schedules")
     args = ap.parse_args()
 
     if args.requests < 1:
@@ -109,29 +195,50 @@ def main():
                                n_steps=args.steps, max_batch=args.batch,
                                max_wait_s=args.max_wait)
 
-    eng_freqca = engine(CachePolicy(kind="freqca", interval=args.interval,
-                                    method=args.method))
+    default_pol = CachePolicy(kind="freqca", interval=args.interval,
+                              method=args.method)
+    policies = None
+    if args.mixed_policies:
+        policies = [default_pol,
+                    CachePolicy(kind="fora", interval=args.interval),
+                    CachePolicy(kind="freqca_a", method=args.method,
+                                rho=0.25, tea_threshold=0.3)]
+    eng_freqca = engine(default_pol)
     eng_full = engine(CachePolicy(kind="none"))
 
     results = {}
     for name, eng in [("freqca", eng_freqca), ("full", eng_full)]:
-        warm = eng.warmup()
-        print(f"[{name:7s}] warmup: {len(eng.buckets)} bucket executables "
-              f"in {warm:.1f}s")
-        bursts = mixed_stream(args.requests, size, cfg.in_channels,
-                              edit_every=args.edit_every)
-        outs, wall = serve_stream(eng, bursts)
+        pols = policies if name == "freqca" else None
+        # mixed-policy batches add (bucket, lane-policy) signatures the
+        # default ladder doesn't cover; warm them all so the timed phase
+        # is compile-free however arrivals split the batches
+        sets = cyclic_signatures(pols, args.batch) if pols else ()
+        warm = eng.warmup(lane_policy_sets=sets)
+        n_exec = len(eng.buckets) + len(sets)
+        print(f"[{name:7s}] warmup: {n_exec} executables "
+              f"({len(eng.buckets)} buckets x policy mixes) in {warm:.1f}s")
+        if args.arrival == "poisson":
+            plan = poisson_stream(args.requests, args.rate, size,
+                                  cfg.in_channels,
+                                  edit_every=args.edit_every, policies=pols)
+            outs, wall = serve_open_loop(eng, plan)
+        else:
+            bursts = mixed_stream(args.requests, size, cfg.in_channels,
+                                  edit_every=args.edit_every, policies=pols)
+            outs, wall = serve_stream(eng, bursts)
         outs.sort(key=lambda o: o.request_id)
         results[name] = (outs, wall)
         s = eng.metrics.summary()
         rps = metrics_lib.throughput(eng.metrics, wall)
+        fulls = sorted(o.n_full_steps for o in outs)
         print(f"[{name:7s}] served {len(outs)} requests in {wall:.2f}s "
               f"({rps:.2f} req/s), full steps/req: "
-              f"{outs[0].n_full_steps}/{args.steps}")
+              f"{fulls[0]}..{fulls[-1]}/{args.steps}")
         print(f"[{name:7s}] occupancy {s['mean_occupancy']:.2f}  "
               f"latency p50/p95 {s['request_latency_p50_s']:.3f}/"
               f"{s['request_latency_p95_s']:.3f}s  "
               f"full-step frac {s['full_step_fraction']:.2f}  "
+              f"lane spread {s['max_lane_full_spread']}  "
               f"compiles {s['compile_misses']} "
               f"(steady-state hits {s['compile_hits']})")
 

@@ -4,11 +4,16 @@
 sampler: requests land in a ``Scheduler`` queue, batches are cut on
 age/deadline pressure and quantised to power-of-two *bucket signatures*
 (see repro.serving.scheduler), and one jitted sampler executable per
-bucket serves them for the life of the process.  The jit cache is keyed
-on the bucket shape only, so steady-state serving never recompiles; the
-input buffer is donated (``donate_argnums=0``) so the noise batch is
-reused as sampler scratch.  When a ``jax.sharding.Mesh`` is supplied the
-batch is placed via ``repro.sharding.partitioning.batch_spec`` so GSPMD
+(bucket, lane-policy) signature serves them for the life of the
+process.  Requests may carry their own cache policy: lanes are driven
+through a per-lane policy bank (repro.core.policies), every request
+gets its own activation schedule and per-request ``n_full_steps``
+accounting, and a uniform batch collapses to the single-policy
+signature so the default ladder is exactly one executable per bucket —
+zero steady-state recompiles once a signature is warm.  The input
+buffer is donated (``donate_argnums=0``) so the noise batch is reused
+as sampler scratch.  When a ``jax.sharding.Mesh`` is supplied the batch
+is placed via ``repro.sharding.partitioning.batch_spec`` so GSPMD
 splits lanes over the data axes.
 
 ``LMEngine`` — prefill + decode for the assigned LM architectures
@@ -38,7 +43,7 @@ __all__ = ["DiffusionEngine", "DiffusionRequest", "DiffusionResult",
 class DiffusionResult(NamedTuple):
     request_id: int
     latents: jnp.ndarray
-    n_full_steps: int
+    n_full_steps: int        # THIS request's activated steps (per lane)
     wall_time_s: float
     queue_wait_s: float = 0.0
     bucket: int = 0
@@ -67,17 +72,27 @@ class DiffusionEngine:
         self.metrics = ServeMetrics()
         self._ts = schedule.timesteps(n_steps)
 
-        def run(x_init):
-            # batch size is static at trace time -> one executable per
-            # bucket signature, cached for the process lifetime
+        def run(x_init, lane_policies):
+            # batch size and the per-lane policy signature are static at
+            # trace time -> one executable per (bucket, policies) pair,
+            # cached for the process lifetime
             batch = x_init.shape[0]
             res = sampler_lib.sample(
                 self.full_fn, self.from_crf_fn, x_init, self._ts,
-                self.policy, crf_shape=(batch,) + self.crf_shape,
+                lane_policies, crf_shape=(batch,) + self.crf_shape,
                 crf_dtype=self.crf_dtype)
-            return res.x, res.n_full
+            return res.x, res.n_full, res.n_full_lanes
 
-        self._jit_run = jax.jit(run, donate_argnums=0)
+        self._jit_run = jax.jit(run, static_argnums=1, donate_argnums=0)
+
+    @staticmethod
+    def _normalize_signature(lanes):
+        """Collapse an all-equal lane assignment to the single policy so
+        uniform batches of any composition share the per-bucket ladder."""
+        lanes = tuple(lanes)
+        if all(p == lanes[0] for p in lanes):
+            return lanes[0]
+        return lanes
 
     # --- compile-cache management ---------------------------------------
     @property
@@ -93,17 +108,29 @@ class DiffusionEngine:
             # compile accounting degrades to all-hits
             return -1
 
-    def warmup(self, buckets: Optional[Sequence[int]] = None) -> float:
-        """Precompile sampler executables for every bucket signature.
+    def warmup(self, buckets: Optional[Sequence[int]] = None,
+               lane_policy_sets: Sequence[Sequence[object]] = ()) -> float:
+        """Precompile sampler executables for every bucket signature on
+        the default policy, plus any extra per-lane policy signatures
+        (``lane_policy_sets``: each entry is a full per-lane assignment
+        whose length must be a bucket size).
 
         Returns wall seconds spent.  After warmup, serving any mix of
-        batch sizes hits the jit cache — zero steady-state recompiles.
+        batch sizes — and any warmed policy mix — hits the jit cache:
+        zero steady-state recompiles.
         """
         t0 = time.perf_counter()
-        for b in (buckets or self.buckets):
+        sigs = [(b, self.policy) for b in (buckets or self.buckets)]
+        for lanes in lane_policy_sets:
+            lanes = tuple(lanes)
+            if len(lanes) not in self.buckets:
+                raise ValueError(f"lane policy set of length {len(lanes)} "
+                                 f"matches no bucket in {self.buckets}")
+            sigs.append((len(lanes), self._normalize_signature(lanes)))
+        for b, sig in sigs:
             x = self._place(jnp.zeros((b,) + self.latent_shape))
             cache_before = self.compiled_buckets()
-            out, _ = self._jit_run(x)
+            out, _, _ = self._jit_run(x, sig)
             out.block_until_ready()
             self.metrics.observe_compile(
                 hit=self.compiled_buckets() == cache_before)
@@ -140,21 +167,25 @@ class DiffusionEngine:
 
     def _execute(self, plan: BatchPlan) -> List[DiffusionResult]:
         x_init = self._place(self.build_x_init(plan))
+        sig = self._normalize_signature(plan.lane_policies(self.policy))
         cache_before = self.compiled_buckets()
         t0 = time.perf_counter()
-        x, n_full = self._jit_run(x_init)
+        x, n_forwards, lane_full = self._jit_run(x_init, sig)
         x.block_until_ready()
         wall = time.perf_counter() - t0
         self.metrics.observe_compile(
             hit=self.compiled_buckets() == cache_before)
-        self.metrics.observe_batch(plan.bucket, plan.n_real, wall,
-                                   int(n_full), self.n_steps)
+        self.metrics.observe_batch(
+            plan.bucket, plan.n_real, wall, int(n_forwards), self.n_steps,
+            lane_full=[int(v) for v in lane_full[:plan.n_real]])
         out = []
         for i, r in enumerate(plan.requests):   # padded lanes never leak
             wait = max(0.0, plan.formed_at - r.submit_time)
-            self.metrics.observe_request(wait, wait + wall)
-            out.append(DiffusionResult(r.request_id, x[i], int(n_full),
-                                       wall, wait, plan.bucket))
+            self.metrics.observe_request(wait, wait + wall,
+                                         n_full=int(lane_full[i]))
+            out.append(DiffusionResult(r.request_id, x[i],
+                                       int(lane_full[i]), wall, wait,
+                                       plan.bucket))
         return out
 
     def run_batch(self, flush: bool = True,

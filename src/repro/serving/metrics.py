@@ -1,5 +1,13 @@
 """Serving metrics: queue depth, batch occupancy, latency percentiles,
-full-step fraction, and compile-cache accounting.
+full-step fraction, per-request full-step counts, and compile-cache
+accounting.
+
+Compute and quality are tracked separately now that activation is
+per-lane: ``full_step_fraction`` charges every lane of a batch for each
+*batch forward* (padded lanes burn the compute whenever any lane
+activates), while ``request_full_steps`` records how many steps each
+individual request actually activated — the per-request number that
+differs across lanes in a mixed-policy batch.
 
 One ``ServeMetrics`` instance per engine.  Recording is cheap (python
 lists + counters); ``summary()`` does the aggregation so it can be
@@ -29,11 +37,13 @@ class ServeMetrics:
     batch_walls: List[float] = dataclasses.field(default_factory=list)
     batch_buckets: List[int] = dataclasses.field(default_factory=list)
     batch_occupancy: List[float] = dataclasses.field(default_factory=list)
+    batch_lane_spread: List[int] = dataclasses.field(default_factory=list)
     full_steps: int = 0
     total_steps: int = 0
     # request-level observations
     request_waits: List[float] = dataclasses.field(default_factory=list)
     request_latencies: List[float] = dataclasses.field(default_factory=list)
+    request_full_steps: List[int] = dataclasses.field(default_factory=list)
     # queue depth samples (taken whenever the engine polls the queue)
     queue_depths: List[int] = dataclasses.field(default_factory=list)
 
@@ -48,17 +58,28 @@ class ServeMetrics:
         self.queue_depths.append(int(depth))
 
     def observe_batch(self, bucket: int, n_real: int, wall_s: float,
-                      n_full: int, n_steps: int) -> None:
+                      n_forwards: int, n_steps: int,
+                      lane_full: Optional[List[int]] = None) -> None:
+        """``n_forwards`` — batch forwards actually run (compute);
+        ``lane_full`` — per-real-lane activated-step counts (quality)."""
+        if lane_full:
+            # spread across lanes of one batch: 0 under a batch-global
+            # decision, > 0 once lanes follow their own schedules
+            self.batch_lane_spread.append(max(lane_full) - min(lane_full))
         self.batch_walls.append(float(wall_s))
         self.batch_buckets.append(int(bucket))
         self.batch_occupancy.append(n_real / max(bucket, 1))
-        # padded lanes still burn the compute, so account per-lane
-        self.full_steps += int(n_full) * int(bucket)
+        # every lane (padded included) burns the compute of each batch
+        # forward, so the compute fraction is forwards-based
+        self.full_steps += int(n_forwards) * int(bucket)
         self.total_steps += int(n_steps) * int(bucket)
 
-    def observe_request(self, wait_s: float, latency_s: float) -> None:
+    def observe_request(self, wait_s: float, latency_s: float,
+                        n_full: Optional[int] = None) -> None:
         self.request_waits.append(float(wait_s))
         self.request_latencies.append(float(latency_s))
+        if n_full is not None:
+            self.request_full_steps.append(int(n_full))
 
     # --- aggregation -----------------------------------------------------
     @property
@@ -89,6 +110,9 @@ class ServeMetrics:
             "request_wait_p50_s": round(
                 percentile(self.request_waits, 50), 4),
             "full_step_fraction": round(self.full_step_fraction(), 4),
+            "request_full_p50": percentile(
+                [float(v) for v in self.request_full_steps], 50),
+            "max_lane_full_spread": max(self.batch_lane_spread, default=0),
             "compile_hits": self.compile_hits,
             "compile_misses": self.compile_misses,
             "max_queue_depth": max(self.queue_depths, default=0),
@@ -101,8 +125,10 @@ class ServeMetrics:
             batch_walls=list(self.batch_walls),
             batch_buckets=list(self.batch_buckets),
             batch_occupancy=list(self.batch_occupancy),
+            batch_lane_spread=list(self.batch_lane_spread),
             request_waits=list(self.request_waits),
             request_latencies=list(self.request_latencies),
+            request_full_steps=list(self.request_full_steps),
             queue_depths=list(self.queue_depths),
         )
 

@@ -26,6 +26,10 @@ class DiffusionRequest:
     # optional conditioning (e.g. reference latents for editing)
     init_latents: Optional[object] = None
     edit_strength: float = 0.0
+    # per-request cache policy (CachePolicy spec or Policy object);
+    # None -> the engine's default.  Requests with different policies
+    # share a batch lane-by-lane (per-lane activation masks).
+    policy: Optional[object] = None
     # serving QoS: cut a batch early rather than let this lapse
     deadline_s: Optional[float] = None
     # accounting (stamped by Scheduler.submit)
@@ -44,6 +48,18 @@ class BatchPlan(NamedTuple):
     @property
     def occupancy(self) -> float:
         return self.n_real / max(self.bucket, 1)
+
+    def lane_policies(self, default) -> List[object]:
+        """Per-lane policy assignment; padded lanes reuse the first real
+        lane's policy, so a uniform batch keeps one signature per bucket
+        (the warmed ladder) and scheduled pads activate only on steps the
+        real lanes already paid for — never forcing extra forwards of
+        their own."""
+        lanes = [r.policy if r.policy is not None else default
+                 for r in self.requests]
+        pad = lanes[0] if lanes else default
+        lanes += [pad] * (self.bucket - self.n_real)
+        return lanes
 
 
 def bucket_sizes(max_batch: int) -> List[int]:

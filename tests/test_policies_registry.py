@@ -1,0 +1,342 @@
+"""Policy-object registry tests: golden equivalence against the legacy
+string-`kind` sampler path, per-lane isolation in mixed batches,
+derived warm-up lengths, the FoCa extension, policy-aware cache-bytes
+accounting, and the open-loop Poisson arrival plan."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as config_lib
+from repro.core import cache as cache_lib
+from repro.core import policies
+from repro.core.cache import CachePolicy
+from repro.core.policies import base as policy_base
+from repro.diffusion import sampler, schedule
+from repro.models import common, dit
+
+
+@pytest.fixture(scope="module")
+def tiny_dit():
+    cfg = config_lib.reduced(config_lib.get_config("dit-small"))
+    params = common.init_params(dit.dit_specs(cfg), jax.random.key(0))
+
+    def full_fn(x, t):
+        tb = jnp.full((x.shape[0],), t)
+        out = dit.dit_forward(params, x, tb, cfg)
+        return out.velocity, out.crf
+
+    def from_crf_fn(crf, t):
+        tb = jnp.full((crf.shape[0],), t)
+        return dit.dit_from_crf(params, crf, tb, cfg, 8, 8)
+
+    x0 = jax.random.normal(jax.random.key(1), (2, 8, 8, cfg.in_channels))
+    return cfg, full_fn, from_crf_fn, x0
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_policy_family():
+    names = policies.available()
+    for expected in ("freqca", "freqca_a", "taylorseer", "fora",
+                     "teacache", "none", "foca"):
+        assert expected in names
+
+
+def test_resolve_spec_and_passthrough():
+    spec = CachePolicy(kind="freqca", interval=7, rho=0.25, high_order=3)
+    pol = spec.resolve()
+    assert isinstance(pol, policies.FreqCaPolicy)
+    assert (pol.interval, pol.rho, pol.high_order) == (7, 0.25, 3)
+    assert policies.resolve(pol) is pol            # objects pass through
+    assert spec.resolve() == pol                   # value-equal -> same key
+    with pytest.raises(KeyError):
+        policies.resolve(CachePolicy(kind="no-such-policy"))
+    with pytest.raises(TypeError):
+        policies.resolve(42)
+
+
+def test_policy_metadata_matches_spec():
+    assert CachePolicy(kind="freqca").resolve().cache_units == 4
+    assert CachePolicy(kind="fora").resolve().cache_units == 1
+    assert CachePolicy(kind="taylorseer").resolve().cache_units == 3
+    assert CachePolicy(kind="none").resolve().cache_units == 0
+    # warm-up length is derived from the predictor's history needs
+    assert CachePolicy(kind="freqca_a").resolve().needed_history == 3
+    assert CachePolicy(kind="freqca_a",
+                       high_order=4).resolve().needed_history == 5
+
+
+# ---------------------------------------------------------------------------
+# golden equivalence vs the legacy string-`kind` sampler
+# ---------------------------------------------------------------------------
+
+def _legacy_sample(full_fn, from_crf_fn, x_init, ts, policy, crf_shape,
+                   crf_dtype=jnp.float32):
+    """Verbatim port of the seed sampler (string-`kind` dispatch +
+    sampler-resident tea0 carries) — the golden reference."""
+    n_steps = ts.shape[0] - 1
+    state0 = cache_lib.init_state(policy, crf_shape, crf_dtype)
+    tea0 = (jnp.zeros((), jnp.float32), jnp.zeros_like(x_init),
+            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32))
+
+    def step(carry, inp):
+        x, state, tea = carry
+        i, t_now, t_next = inp
+        acc, prev_x, since, err_last = tea
+
+        def full_branch(op):
+            x_, state_ = op
+            v, crf = full_fn(x_, t_now)
+            if policy.kind == "freqca_a":
+                pred = cache_lib.predict(policy, state_, t_now)
+                err = jnp.linalg.norm(
+                    (pred - crf).astype(jnp.float32)) / jnp.maximum(
+                    jnp.linalg.norm(crf.astype(jnp.float32)), 1e-6)
+            else:
+                err = jnp.zeros((), jnp.float32)
+            return v, cache_lib.update(policy, state_, crf, t_now), 1, err
+
+        def cached_branch(op):
+            x_, state_ = op
+            crf_hat = cache_lib.predict(policy, state_, t_now)
+            return (from_crf_fn(crf_hat, t_now), state_, 0,
+                    jnp.zeros((), jnp.float32))
+
+        if policy.kind == "teacache":
+            rel = jnp.mean(jnp.abs(x - prev_x)) / jnp.maximum(
+                jnp.mean(jnp.abs(prev_x)), 1e-6)
+            acc = acc + rel.astype(jnp.float32)
+            warm = state.n_valid < 1
+            act = warm | (acc > policy.tea_threshold) | (i == 0)
+            acc = jnp.where(act, 0.0, acc)
+        elif policy.kind == "freqca_a":
+            warm = state.n_valid < 3
+            projected = (since.astype(jnp.float32) + 1.0) * err_last
+            act = warm | (projected > policy.tea_threshold)
+        else:
+            act = cache_lib.should_activate(policy, state, i)
+        if policy.kind == "none":
+            v, state, used, err_new = full_branch((x, state))
+        else:
+            v, state, used, err_new = jax.lax.cond(
+                act, full_branch, cached_branch, (x, state))
+        since = jnp.where(jnp.asarray(used, bool), 0, since + 1)
+        err_last = jnp.where(jnp.asarray(used, bool), err_new, err_last)
+        dt = (t_next - t_now).astype(x.dtype)
+        x_new = x + dt * v.astype(x.dtype)
+        return (x_new, state, (acc, x, since, err_last)), \
+            jnp.asarray(used, jnp.int32)
+
+    idx = jnp.arange(n_steps)
+    (x, _, _), used = jax.lax.scan(step, (x_init, state0, tea0),
+                                   (idx, ts[:-1], ts[1:]))
+    return x, jnp.sum(used)
+
+
+SEED_CONFIGS = [
+    CachePolicy(kind="none"),
+    CachePolicy(kind="fora", interval=5),
+    CachePolicy(kind="taylorseer", interval=5, high_order=2),
+    CachePolicy(kind="freqca", interval=5, method="dct", rho=0.25),
+    CachePolicy(kind="freqca", interval=3, method="fft", rho=0.0625),
+]
+
+
+@pytest.mark.parametrize("pol", SEED_CONFIGS,
+                         ids=lambda p: f"{p.kind}-{p.method}-{p.interval}")
+def test_golden_equivalence_scheduled(tiny_dit, pol):
+    """Registered policy objects bit-match the legacy path on the seed
+    configs (scheduled policies, batch > 1)."""
+    cfg, full_fn, from_crf_fn, x0 = tiny_dit
+    ts = schedule.timesteps(20)
+    crf_shape = (2, 16, cfg.d_model)
+    want_x, want_full = _legacy_sample(full_fn, from_crf_fn, x0, ts, pol,
+                                       crf_shape)
+    res = sampler.sample(full_fn, from_crf_fn, x0, ts, pol,
+                         crf_shape=crf_shape)
+    np.testing.assert_array_equal(np.asarray(res.x), np.asarray(want_x))
+    assert int(res.n_full) == int(want_full)
+    np.testing.assert_array_equal(np.asarray(res.n_full_lanes),
+                                  int(want_full))
+
+
+@pytest.mark.parametrize("pol", [
+    CachePolicy(kind="teacache", tea_threshold=0.05),
+    CachePolicy(kind="freqca_a", tea_threshold=0.3, rho=0.25),
+], ids=lambda p: p.kind)
+def test_golden_equivalence_adaptive_solo(tiny_dit, pol):
+    """Adaptive policies match the legacy path at batch 1, where the
+    legacy batch-global decision IS the lane decision.  (At batch > 1
+    the new path is per-lane by design — covered below.)"""
+    cfg, full_fn, from_crf_fn, x0 = tiny_dit
+    ts = schedule.timesteps(20)
+    x0 = x0[:1]
+    crf_shape = (1, 16, cfg.d_model)
+    want_x, want_full = _legacy_sample(full_fn, from_crf_fn, x0, ts, pol,
+                                       crf_shape)
+    res = sampler.sample(full_fn, from_crf_fn, x0, ts, pol,
+                         crf_shape=crf_shape)
+    np.testing.assert_array_equal(np.asarray(res.x), np.asarray(want_x))
+    assert int(res.n_full_lanes[0]) == int(want_full)
+
+
+# ---------------------------------------------------------------------------
+# per-lane isolation
+# ---------------------------------------------------------------------------
+
+def test_mixed_batch_lane_matches_solo(tiny_dit):
+    """A lane keeps its solo-batch behaviour inside a mixed-policy
+    batch: the `none` lane matches its solo uncached run, the cached
+    lane matches its solo cached run, and per-lane n_full decouple."""
+    cfg, full_fn, from_crf_fn, x0 = tiny_dit
+    ts = schedule.timesteps(16)
+    mix = (CachePolicy(kind="none"),
+           CachePolicy(kind="freqca", interval=4, rho=0.25))
+    res = sampler.sample(full_fn, from_crf_fn, x0, ts, mix,
+                         crf_shape=(2, 16, cfg.d_model))
+    assert int(res.n_full_lanes[0]) == 16
+    assert int(res.n_full_lanes[1]) < 16
+    assert int(res.n_full) == 16        # forwards = union of activations
+    for j, pol in enumerate(mix):
+        solo = sampler.sample(full_fn, from_crf_fn, x0[j:j + 1], ts, pol,
+                              crf_shape=(1, 16, cfg.d_model))
+        assert int(solo.n_full_lanes[0]) == int(res.n_full_lanes[j])
+        np.testing.assert_allclose(np.asarray(res.x[j]),
+                                   np.asarray(solo.x[0]), atol=1e-5)
+
+
+def test_uniform_adaptive_batch_is_per_lane(tiny_dit):
+    """A single adaptive policy over a batch now decides per lane: each
+    lane matches its solo run even when the other lane's content would
+    have flipped the old batch-global decision."""
+    cfg, full_fn, from_crf_fn, x0 = tiny_dit
+    ts = schedule.timesteps(20)
+    pol = CachePolicy(kind="freqca_a", tea_threshold=0.3, rho=0.25)
+    res = sampler.sample(full_fn, from_crf_fn, x0, ts, pol,
+                         crf_shape=(2, 16, cfg.d_model))
+    for j in range(2):
+        solo = sampler.sample(full_fn, from_crf_fn, x0[j:j + 1], ts, pol,
+                              crf_shape=(1, 16, cfg.d_model))
+        assert int(solo.n_full_lanes[0]) == int(res.n_full_lanes[j])
+        np.testing.assert_allclose(np.asarray(res.x[j]),
+                                   np.asarray(solo.x[0]), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# derived warm-up (satellite: no hard-coded `n_valid < 3`)
+# ---------------------------------------------------------------------------
+
+def test_freqca_a_warmup_follows_high_order(tiny_dit):
+    """With an unbounded error budget freqca_a activates exactly its
+    warm-up steps — which must track `high_order`, not the old
+    hard-coded 3, so a bigger ring is never sampled underfilled."""
+    cfg, full_fn, from_crf_fn, x0 = tiny_dit
+    ts = schedule.timesteps(20)
+    for high_order, want in [(2, 3), (4, 5)]:
+        pol = CachePolicy(kind="freqca_a", tea_threshold=1e9,
+                          high_order=high_order, rho=0.25)
+        res = sampler.sample(full_fn, from_crf_fn, x0[:1], ts, pol,
+                             crf_shape=(1, 16, cfg.d_model))
+        assert int(res.n_full_lanes[0]) == want, (high_order, want)
+
+
+# ---------------------------------------------------------------------------
+# FoCa (registry extensibility)
+# ---------------------------------------------------------------------------
+
+def _ctx(t, batch=1, feat_shape=(4,)):
+    return policy_base.StepContext(
+        step_idx=jnp.asarray(0), t_now=jnp.asarray(t),
+        x=jnp.zeros((batch, 1)), batch=batch, feat_shape=feat_shape)
+
+
+def test_foca_calibrated_forecast():
+    """FoCa = TaylorSeer forecast + per-lane gain calibration: exact on
+    a linear trajectory (gain 1), gain-corrected under uniform drift."""
+    pol = policies.FoCaPolicy(interval=3, high_order=1)
+    traj = lambda t: jnp.full((1, 4), 2.0 - t)
+    state = pol.init(1, (4,))
+    for t in [1.0, 0.8, 0.6]:
+        state = pol.update(state, traj(t), _ctx(t))
+    np.testing.assert_allclose(np.asarray(state.gain), 1.0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(pol.predict(state, _ctx(0.4))),
+                               1.6, atol=1e-3)
+    # trajectory jumps to 1.5x the forecast -> gain refits toward 1.5
+    state = pol.update(state, 1.5 * traj(0.4), _ctx(0.4))
+    assert abs(float(state.gain[0]) - 1.5) < 0.01
+    # ... and is clipped to calib_clip under extreme drift
+    state = pol.update(state, 100.0 * traj(0.2), _ctx(0.2))
+    assert float(state.gain[0]) == pytest.approx(pol.calib_clip)
+
+
+def test_foca_samples_end_to_end(tiny_dit):
+    cfg, full_fn, from_crf_fn, x0 = tiny_dit
+    ts = schedule.timesteps(20)
+    res = sampler.sample(full_fn, from_crf_fn, x0, ts,
+                         CachePolicy(kind="foca", interval=5),
+                         crf_shape=(2, 16, cfg.d_model))
+    assert bool(jnp.isfinite(res.x).all())
+    assert int(res.n_full) < 20
+
+
+# ---------------------------------------------------------------------------
+# cache-bytes accounting (satellite: dummy slots excluded)
+# ---------------------------------------------------------------------------
+
+def test_cache_bytes_excludes_dummy_low_slot():
+    feat = (1, 32, 16)
+    for kind in ("taylorseer", "foca", "fora", "teacache"):
+        pol = CachePolicy(kind=kind, high_order=2)
+        state = cache_lib.init_state(pol, feat)
+        raw = cache_lib.cache_bytes(state)
+        real = cache_lib.cache_bytes(state, pol)
+        dummy = (state.low_hist.size * state.low_hist.dtype.itemsize
+                 + state.ts_low.size * state.ts_low.dtype.itemsize)
+        assert real == raw - dummy, kind
+        # memory scales with cache_units, matching §4.4.1 accounting
+        per_unit = (state.high_hist.size // pol.cache_units
+                    * state.high_hist.dtype.itemsize)
+        assert real >= per_unit * pol.cache_units, kind
+    pol = CachePolicy(kind="none")
+    assert cache_lib.cache_bytes(cache_lib.init_state(pol, feat), pol) == 0
+    # freqca uses both bands: nothing excluded
+    pol = CachePolicy(kind="freqca")
+    state = cache_lib.init_state(pol, feat)
+    assert cache_lib.cache_bytes(state, pol) == cache_lib.cache_bytes(state)
+    # the new policy objects carry no dummy slots at all
+    obj = CachePolicy(kind="taylorseer", high_order=2).resolve()
+    st = obj.init(1, feat)
+    want = (np.prod((1, 3) + feat) * 4      # hist [B, K, *feat] f32
+            + 3 * 4                          # ts [B, K]
+            + 4)                             # n_valid [B] int32
+    assert obj.state_bytes(st) == want
+
+
+# ---------------------------------------------------------------------------
+# Poisson arrival plan (satellite: open-loop client)
+# ---------------------------------------------------------------------------
+
+def test_poisson_stream_plan():
+    from repro.launch.serve import poisson_stream
+    plan = poisson_stream(200, rate=4.0, size=8, channels=4,
+                          edit_every=5, seed=3)
+    times = [t for t, _ in plan]
+    assert len(plan) == 200
+    assert all(b > a for a, b in zip(times, times[1:]))
+    gaps = np.diff([0.0] + times)
+    assert abs(float(np.mean(gaps)) - 0.25) < 0.06    # mean ~ 1/rate
+    # deterministic for a fixed seed; different seed -> different plan
+    again = poisson_stream(200, rate=4.0, size=8, channels=4,
+                           edit_every=5, seed=3)
+    assert [t for t, _ in again] == times
+    other = poisson_stream(200, rate=4.0, size=8, channels=4,
+                           edit_every=5, seed=4)
+    assert [t for t, _ in other] != times
+    # editing requests keep their cadence inside the plan
+    assert all(plan[i][1].init_latents is not None
+               for i in range(4, 200, 5))
+    with pytest.raises(ValueError):
+        poisson_stream(4, rate=0.0, size=8, channels=4)

@@ -37,7 +37,8 @@ def tiny_dit():
     return cfg, full_fn, from_crf_fn, x0
 
 
-@pytest.mark.parametrize("kind", ["none", "fora", "taylorseer", "freqca"])
+@pytest.mark.parametrize("kind", ["none", "fora", "taylorseer", "foca",
+                                  "freqca"])
 def test_policies_sample_finite(tiny_dit, kind):
     cfg, full_fn, from_crf_fn, x0 = tiny_dit
     ts = schedule.timesteps(20)

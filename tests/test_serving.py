@@ -36,13 +36,13 @@ def dit_fns():
     return cfg, full_fn, from_crf_fn
 
 
-def make_engine(dit_fns, max_batch=4, **kw):
+def make_engine(dit_fns, max_batch=4, n_steps=N_STEPS, **kw):
     cfg, full_fn, from_crf_fn = dit_fns
     return DiffusionEngine(full_fn, from_crf_fn, (SIZE, SIZE,
                                                   cfg.in_channels),
                            (16, cfg.d_model),
                            CachePolicy(kind="freqca", interval=3),
-                           n_steps=N_STEPS, max_batch=max_batch, **kw)
+                           n_steps=n_steps, max_batch=max_batch, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -175,6 +175,22 @@ def test_no_recompile_across_mixed_sizes(dit_fns):
     assert eng.metrics.summary()["mean_occupancy"] <= 1.0
 
 
+def test_open_loop_poisson_serving(dit_fns):
+    """Open-loop client: timestamped Poisson arrivals, batches cut by
+    the scheduler's own age pressure (flush=False), everything served."""
+    from repro.launch.serve import poisson_stream, serve_open_loop
+    eng = make_engine(dit_fns, max_batch=4, max_wait_s=0.01)
+    eng.warmup()
+    warm_misses = eng.metrics.compile_misses
+    plan = poisson_stream(8, rate=200.0, size=SIZE,
+                          channels=dit_fns[0].in_channels, edit_every=0)
+    outs, wall = serve_open_loop(eng, plan)
+    assert sorted(o.request_id for o in outs) == list(range(8))
+    assert all(jnp.isfinite(o.latents).all() for o in outs)
+    assert eng.metrics.compile_misses == warm_misses   # still zero steady
+    assert eng.scheduler.depth == 0
+
+
 def test_deferred_formation_through_engine(dit_fns):
     eng = make_engine(dit_fns, max_batch=4, max_wait_s=30.0)
     eng.scheduler.clock = lambda: 0.0
@@ -191,8 +207,9 @@ def test_deferred_formation_through_engine(dit_fns):
 def test_metrics_percentiles_and_summary():
     m = metrics_lib.ServeMetrics()
     for w in [0.1, 0.2, 0.3, 0.4, 1.0]:
-        m.observe_batch(bucket=4, n_real=2, wall_s=w, n_full=2, n_steps=10)
-    m.observe_request(0.0, 0.5)
+        m.observe_batch(bucket=4, n_real=2, wall_s=w, n_forwards=2,
+                        n_steps=10, lane_full=[2, 1])
+    m.observe_request(0.0, 0.5, n_full=2)
     m.observe_compile(hit=False)
     m.observe_compile(hit=True)
     m.observe_queue_depth(3)
@@ -201,6 +218,68 @@ def test_metrics_percentiles_and_summary():
     assert s["batch_wall_p95_s"] == 1.0
     assert s["mean_occupancy"] == 0.5
     assert s["full_step_fraction"] == 0.2
+    assert s["request_full_p50"] == 2
+    assert s["max_lane_full_spread"] == 1
     assert s["compile_hits"] == 1 and s["compile_misses"] == 1
     assert s["max_queue_depth"] == 3
     assert metrics_lib.throughput(m, 2.0) == 0.5
+
+
+# ---------------------------------------------------------------------------
+# per-lane policies
+# ---------------------------------------------------------------------------
+
+def test_mixed_policy_batch_per_lane_accounting(dit_fns):
+    """The ISSUE-2 acceptance path: one lane freqca_a, one lane fora in
+    the same batch -> per-request n_full_steps differ, each lane's
+    latents match its solo-batch run, and the mixed signature serves
+    with zero steady-state recompiles once warm."""
+    eng = make_engine(dit_fns, max_batch=2, n_steps=12)
+    pol_a = CachePolicy(kind="freqca_a", tea_threshold=0.3, rho=0.25)
+    pol_b = CachePolicy(kind="fora", interval=2)
+    lanes = (pol_a, pol_b)
+    warm_s = eng.warmup(buckets=[1], lane_policy_sets=[lanes])
+    assert warm_s > 0 and eng.metrics.compile_misses >= 2
+
+    def submit_pair():
+        eng.submit(DiffusionRequest(request_id=0, seed=0, policy=pol_a))
+        eng.submit(DiffusionRequest(request_id=1, seed=1, policy=pol_b))
+        return eng.run_batch()
+
+    out = submit_pair()
+    assert [o.request_id for o in out] == [0, 1]
+    # per-request activated-step counts decouple across lanes
+    assert out[0].n_full_steps != out[1].n_full_steps
+    assert eng.metrics.summary()["max_lane_full_spread"] > 0
+
+    # each lane matches its solo (bucket-1, uniform-policy) run
+    for o, pol in zip(out, lanes):
+        eng.submit(DiffusionRequest(request_id=o.request_id,
+                                    seed=o.request_id, policy=pol))
+        solo = eng.run_batch()[0]
+        assert solo.n_full_steps == o.n_full_steps
+        np.testing.assert_allclose(np.asarray(o.latents),
+                                   np.asarray(solo.latents), atol=1e-5)
+
+    # steady state: every signature seen so far is warm — repeated
+    # mixed-policy batches never recompile
+    warm_misses = eng.metrics.compile_misses
+    for _ in range(2):
+        submit_pair()
+    assert eng.metrics.compile_misses == warm_misses
+
+
+def test_uniform_nondefault_policy_collapses_signature(dit_fns):
+    """All lanes on the same non-default policy -> single-policy jit
+    signature (one compile), not a per-lane tuple per bucket."""
+    eng = make_engine(dit_fns, max_batch=2, n_steps=6)
+    eng.warmup()
+    misses = eng.metrics.compile_misses
+    pol = CachePolicy(kind="fora", interval=3)
+    for rep in range(2):
+        for i in range(2):
+            eng.submit(DiffusionRequest(request_id=i, seed=i, policy=pol))
+        out = eng.run_batch()
+        assert len(out) == 2
+    # one new executable for the fora signature, reused on the repeat
+    assert eng.metrics.compile_misses == misses + 1
