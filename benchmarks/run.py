@@ -75,6 +75,11 @@ def main(argv=None) -> None:
         max_batch=4 if args.smoke else 8)
     csv.append("serve_mixed,0,lane_spread=%s"
                % svm[0]["max_lane_full_spread"])
+    sva = serve_throughput.run_async(
+        n_requests=14 if args.smoke else 26,
+        max_batch=4 if args.smoke else 8)
+    csv.append("serve_async,0,rps_vs_single_thread=%s"
+               % sva[-1]["rps_vs_single_thread"])
     try:
         rl = roofline.run()
         csv.append("roofline,0,combos=%d" % len(rl))

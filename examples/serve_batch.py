@@ -4,9 +4,11 @@ continuous-batching FreqCa DiffusionEngine — per-bucket precompiled
 executables, age-based batch formation, metrics report.
 
 Requests carry per-request cache policies (freqca / fora / freqca_a
-cycling), so lanes sharing a batch follow their own activation
-schedules, and arrivals follow an open-loop Poisson process so the
-batch former works under real queueing.
+cycling), arrivals follow an open-loop Poisson process, and the client
+is four real threads submitting through ``AsyncDiffusionEngine`` —
+every submit returns a future immediately and the engine's worker
+overlaps the clients (``--clients 0`` would fall back to the
+single-thread sync replay baseline).
 
   PYTHONPATH=src python examples/serve_batch.py
 """
@@ -17,5 +19,5 @@ if __name__ == "__main__":
     sys.argv = [sys.argv[0], "--requests", "16", "--interval", "5",
                 "--steps", "50", "--train-steps", "120", "--batch", "8",
                 "--edit-every", "5", "--mixed-policies",
-                "--arrival", "poisson", "--rate", "2.0"]
+                "--arrival", "poisson", "--rate", "2.0", "--clients", "4"]
     serve.main()

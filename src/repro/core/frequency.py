@@ -59,21 +59,37 @@ def idct(x: jnp.ndarray, axis: int = -2) -> jnp.ndarray:
     return jnp.moveaxis(xm @ c, -1, axis).astype(x.dtype)
 
 
-def low_pass_mask(n: int, rho: float, method: Method) -> jnp.ndarray:
+def low_pass_mask_np(n: int, rho: float, method: Method) -> np.ndarray:
     """Boolean mask over the n frequency bins; True = low-frequency.
 
-    For the FFT the spectrum is two-sided: low frequencies live at both
-    ends of the bin axis (bins [0, m) and (n-m, n)).  For the DCT bins
-    are one-sided: low = [0, m).
+    Single source of truth for the band split (the jnp ``low_pass_mask``
+    and the kernels' host-side projection bases all derive from it).
+    Both transforms target ``m = round(n * rho)`` (clamped to [1, n])
+    kept bins.  The DCT spectrum is one-sided: low = [0, m), exactly
+    ``m`` bins.  The real-signal FFT projection must be
+    conjugate-symmetric — DC plus whole ±frequency pairs, an odd count,
+    living at both ends of the bin axis — so an even target rounds *up*
+    to ``m + 1`` kept bins (``k = m // 2`` pairs; never narrower than
+    the DCT band for the same ``rho``): the two methods always
+    decompose the same band within one bin.
     """
-    m = max(int(round(n * rho)), 1)
-    idx = jnp.arange(n)
+    m = min(max(int(round(n * rho)), 1), n)
+    idx = np.arange(n)
     if method == "fft":
-        # conjugate-symmetric: DC + K positive/negative frequency pairs,
-        # so the real-signal projection is orthogonal (Parseval holds)
-        k = (m - 1) // 2
+        # conjugate-symmetric, so the real-signal projection is
+        # orthogonal (Parseval holds)
+        k = m // 2
         return (idx <= k) | (idx >= n - k)
     return idx < m
+
+
+def kept_bins(n: int, rho: float, method: Method) -> int:
+    """Number of low-frequency bins ``low_pass_mask`` keeps."""
+    return int(low_pass_mask_np(n, rho, method).sum())
+
+
+def low_pass_mask(n: int, rho: float, method: Method) -> jnp.ndarray:
+    return jnp.asarray(low_pass_mask_np(n, rho, method))
 
 
 def decompose(z: jnp.ndarray, rho: float, method: Method,

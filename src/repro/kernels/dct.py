@@ -69,25 +69,18 @@ def token_basis_matmul(basis: jnp.ndarray, x: jnp.ndarray,
     return y.astype(x.dtype)
 
 
-def _low_pass_mask_np(n: int, rho: float, method: str) -> np.ndarray:
-    """Pure-numpy twin of frequency.low_pass_mask (host-side basis calc)."""
-    m = max(int(round(n * rho)), 1)
-    idx = np.arange(n)
-    if method == "fft":
-        k = (m - 1) // 2
-        return (idx <= k) | (idx >= n - k)
-    return idx < m
-
-
 @functools.lru_cache(maxsize=16)
 def _band_split_basis_np(s: int, rho: float, method: str):
-    """Low-pass projection L = C^T diag(mask) C (idempotent, symmetric)."""
+    """Low-pass projection L = C^T diag(mask) C (idempotent, symmetric).
+
+    The kept bins come from ``frequency.low_pass_mask_np`` — the single
+    source of the band-width rounding rule."""
     if method == "dct":
         c = frequency._dct_basis_np(s)
-        mask = _low_pass_mask_np(s, rho, "dct")
+        mask = frequency.low_pass_mask_np(s, rho, "dct")
         return (c.T * mask.astype(np.float64)) @ c
     # fft: real low-pass projection is circulant; build from the mask
-    mask = _low_pass_mask_np(s, rho, "fft")
+    mask = frequency.low_pass_mask_np(s, rho, "fft")
     f = np.fft.fft(np.eye(s), axis=0)
     finv = np.fft.ifft(np.diag(mask.astype(np.float64)) @ f, axis=0)
     return np.real(finv)

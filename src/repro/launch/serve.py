@@ -7,14 +7,20 @@ scheduler/engine metrics (occupancy, p50/p95 latency, full-step
 fraction, compile cache), throughput, speedup vs the uncached engine,
 and output fidelity (PSNR vs uncached).
 
-Two client shapes:
+Three client shapes:
 
 * closed loop (``--arrival burst``, default) — deterministic bursts,
   each drained before the next arrives (the seed drivers' behaviour);
 * open loop (``--arrival poisson --rate R``) — requests arrive on a
   Poisson process at R req/s regardless of server progress, so the
   queue builds while the engine is busy and the age/deadline batch
-  former is exercised under real queueing.
+  former is exercised under real queueing.  The default replay is a
+  single thread interleaving submits with engine turns (the sync
+  baseline);
+* threaded open loop (``--arrival poisson --clients N``) — the arrival
+  plan is split over N real client threads submitting concurrently
+  through ``AsyncDiffusionEngine``; every ``submit`` returns a future
+  immediately and the engine's worker overlaps the clients.
 
 ``--mixed-policies`` assigns per-request cache policies (freqca / fora
 / freqca_a cycling) so lanes in one batch follow their own activation
@@ -22,11 +28,14 @@ schedules.
 
   PYTHONPATH=src python -m repro.launch.serve --requests 16 --interval 5
   PYTHONPATH=src python -m repro.launch.serve --arrival poisson --rate 2
+  PYTHONPATH=src python -m repro.launch.serve --arrival poisson --rate 2 \
+      --clients 4
 """
 from __future__ import annotations
 
 import argparse
 import itertools
+import threading
 import time
 
 import jax
@@ -39,6 +48,7 @@ from repro.data import synthetic
 from repro.launch.train import train_dit
 from repro.models import dit
 from repro.serving import metrics as metrics_lib
+from repro.serving.async_engine import AsyncDiffusionEngine
 from repro.serving.engine import DiffusionEngine, DiffusionRequest
 
 
@@ -148,6 +158,45 @@ def serve_open_loop(eng: DiffusionEngine, plan, poll_s: float = 0.002):
     return outs, time.perf_counter() - t0
 
 
+def serve_threaded_open_loop(eng: DiffusionEngine, plan, clients: int = 4):
+    """Replay a timestamped arrival plan from N concurrent client threads.
+
+    The plan is split round-robin over ``clients`` threads; each thread
+    sleeps until its requests' arrival times and submits through the
+    thread-safe ``AsyncDiffusionEngine`` — every submit returns a future
+    immediately, so clients never block on the engine and the worker
+    overlaps them (the regime the single-thread replay can't reach:
+    there, a slow batch delays every later arrival's submission).
+    Returns ``(results_in_request_order, wall_s)``.
+    """
+    if clients < 1:
+        raise ValueError(f"clients must be >= 1, got {clients}")
+    futures = [None] * len(plan)
+    with AsyncDiffusionEngine(eng) as aeng:
+        t0 = time.perf_counter()
+
+        def client(k: int):
+            for i in range(k, len(plan), clients):
+                arrival, req = plan[i]
+                delay = arrival - (time.perf_counter() - t0)
+                if delay > 0:
+                    time.sleep(delay)
+                futures[i] = aeng.submit(req)
+
+        threads = [threading.Thread(target=client, args=(k,), daemon=True)
+                   for k in range(clients)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        # all clients are done submitting: flush the tail batch instead
+        # of letting it age out (the sync replay can't know this)
+        aeng.drain()
+        outs = [f.result() for f in futures]   # stream back as they land
+        wall = time.perf_counter() - t0
+    return outs, wall
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=16)
@@ -166,6 +215,10 @@ def main():
                     help="closed-loop bursts or open-loop Poisson client")
     ap.add_argument("--rate", type=float, default=2.0,
                     help="Poisson arrival rate (req/s) for --arrival poisson")
+    ap.add_argument("--clients", type=int, default=0,
+                    help="N concurrent client threads through the async "
+                         "engine for --arrival poisson (0 = single-thread "
+                         "sync replay baseline)")
     ap.add_argument("--mixed-policies", action="store_true",
                     help="cycle per-request policies (freqca/fora/freqca_a)"
                          " — lanes in one batch keep their own schedules")
@@ -221,7 +274,11 @@ def main():
             plan = poisson_stream(args.requests, args.rate, size,
                                   cfg.in_channels,
                                   edit_every=args.edit_every, policies=pols)
-            outs, wall = serve_open_loop(eng, plan)
+            if args.clients > 0:
+                outs, wall = serve_threaded_open_loop(eng, plan,
+                                                      clients=args.clients)
+            else:
+                outs, wall = serve_open_loop(eng, plan)
         else:
             bursts = mixed_stream(args.requests, size, cfg.in_channels,
                                   edit_every=args.edit_every, policies=pols)
@@ -234,13 +291,15 @@ def main():
         print(f"[{name:7s}] served {len(outs)} requests in {wall:.2f}s "
               f"({rps:.2f} req/s), full steps/req: "
               f"{fulls[0]}..{fulls[-1]}/{args.steps}")
+        ttfr = s["time_to_first_result_s"]
         print(f"[{name:7s}] occupancy {s['mean_occupancy']:.2f}  "
               f"latency p50/p95 {s['request_latency_p50_s']:.3f}/"
               f"{s['request_latency_p95_s']:.3f}s  "
               f"full-step frac {s['full_step_fraction']:.2f}  "
               f"lane spread {s['max_lane_full_spread']}  "
               f"compiles {s['compile_misses']} "
-              f"(steady-state hits {s['compile_hits']})")
+              f"(steady-state hits {s['compile_hits']})"
+              + (f"  ttfr {ttfr:.3f}s" if ttfr is not None else ""))
 
     f_outs, f_wall = results["freqca"]
     u_outs, u_wall = results["full"]

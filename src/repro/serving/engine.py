@@ -16,8 +16,14 @@ as sampler scratch.  When a ``jax.sharding.Mesh`` is supplied the batch
 is placed via ``repro.sharding.partitioning.batch_spec`` so GSPMD
 splits lanes over the data axes.
 
+The execution path (``execute_plan``) is shared with
+``repro.serving.async_engine.AsyncDiffusionEngine``, which adds a
+thread-safe submit-returns-future path and a background worker.
+
 ``LMEngine`` — prefill + decode for the assigned LM architectures
-(KV-cache ring for sliding-window configs).
+(KV-cache ring for sliding-window configs); the prompt is prefilled in
+one jitted dispatch (a ``lax.scan`` of the decode path), not one
+dispatch per prompt token.
 """
 from __future__ import annotations
 
@@ -165,7 +171,12 @@ class DiffusionEngine:
         return jax.device_put(
             x, partitioning.batch_spec(self.mesh, x.shape[0], x.ndim))
 
-    def _execute(self, plan: BatchPlan) -> List[DiffusionResult]:
+    def execute_plan(self, plan: BatchPlan) -> List[DiffusionResult]:
+        """Run one formed batch through the jitted sampler and build the
+        per-request results.  This is the single execution path shared by
+        the sync drivers (``run_batch``) and ``AsyncDiffusionEngine``'s
+        worker thread — only one thread may call it at a time (the async
+        engine guarantees this by owning a single worker)."""
         x_init = self._place(self.build_x_init(plan))
         sig = self._normalize_signature(plan.lane_policies(self.policy))
         cache_before = self.compiled_buckets()
@@ -188,6 +199,9 @@ class DiffusionEngine:
                                        plan.bucket))
         return out
 
+    # backwards-compatible alias (pre-async name)
+    _execute = execute_plan
+
     def run_batch(self, flush: bool = True,
                   now: Optional[float] = None) -> List[DiffusionResult]:
         """Cut and serve one batch.  ``flush=True`` (default) drains the
@@ -197,7 +211,7 @@ class DiffusionEngine:
         plan = self.scheduler.form_batch(now=now, flush=flush)
         if plan is None:
             return []
-        return self._execute(plan)
+        return self.execute_plan(plan)
 
     def serve_until_drained(self, flush: bool = True,
                             poll_s: float = 0.005) -> List[DiffusionResult]:
@@ -222,15 +236,28 @@ class LMEngine:
         cache_len = self.window if self.window > 0 else max_len
 
         def prefill(params, tokens, cache):
-            # teacher-forced prefill via repeated decode is wasteful; use
-            # full forward for logits, then replay tokens into the cache.
-            out = transformer.forward(params, tokens, cfg, remat=False)
-            return out.logits
+            # single jitted dispatch for the whole prompt: scan the
+            # decode path over the prompt positions so the KV/SSM cache
+            # fills, carrying only the last position's logits.  One
+            # executable per prompt length (the scan length is static).
+            def step(carry, tok):
+                c, prev = carry
+                logits, c = transformer.decode_step(params, tok[:, None],
+                                                    c, cfg,
+                                                    window=self.window)
+                return (c, logits.astype(prev.dtype)), None
+
+            init = (cache, jnp.zeros((tokens.shape[0], 1, cfg.vocab_size),
+                                     jnp.dtype(cfg.dtype)))
+            (cache, logits), _ = jax.lax.scan(
+                step, init, jnp.moveaxis(tokens, 1, 0))
+            return logits, cache
 
         def decode(params, tok, cache):
             return transformer.decode_step(params, tok, cache, cfg,
                                            window=self.window)
 
+        self._prefill = jax.jit(prefill)
         self._decode = jax.jit(decode)
         self._cache_len = cache_len
 
@@ -239,13 +266,16 @@ class LMEngine:
                                         jnp.dtype(self.cfg.dtype))
 
     def generate(self, prompt_tokens: jnp.ndarray, n_new: int):
-        """prompt_tokens: [B, P] -> [B, P + n_new] greedy continuation."""
-        b, p = prompt_tokens.shape
-        cache = self.new_cache(b)
-        logits = None
-        for i in range(p):   # replayed prefill (decode-path reference)
-            logits, cache = self._decode(self.params,
-                                         prompt_tokens[:, i:i + 1], cache)
+        """prompt_tokens: [B, P] -> [B, P + n_new] greedy continuation.
+
+        The prompt is prefetched in ONE jitted dispatch (``_prefill``
+        scans the decode path over the P positions and fills the cache),
+        not P per-token dispatches; decode then proceeds one token at a
+        time.
+        """
+        logits, cache = self._prefill(self.params,
+                                      prompt_tokens.astype(jnp.int32),
+                                      self.new_cache(prompt_tokens.shape[0]))
         toks = [prompt_tokens]
         cur = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         for _ in range(n_new):

@@ -1,6 +1,6 @@
 """Serving metrics: queue depth, batch occupancy, latency percentiles,
-full-step fraction, per-request full-step counts, and compile-cache
-accounting.
+full-step fraction, per-request full-step counts, time-to-first-result,
+and compile-cache accounting.
 
 Compute and quality are tracked separately now that activation is
 per-lane: ``full_step_fraction`` charges every lane of a batch for each
@@ -10,12 +10,15 @@ individual request actually activated — the per-request number that
 differs across lanes in a mixed-policy batch.
 
 One ``ServeMetrics`` instance per engine.  Recording is cheap (python
-lists + counters); ``summary()`` does the aggregation so it can be
-called once at the end of a serving run or periodically for dashboards.
+lists + counters) and thread-safe — client threads and the async
+engine's worker record concurrently under one lock; ``summary()`` does
+the aggregation so it can be called once at the end of a serving run or
+periodically for dashboards.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, List, Optional
 
 
@@ -46,40 +49,56 @@ class ServeMetrics:
     request_full_steps: List[int] = dataclasses.field(default_factory=list)
     # queue depth samples (taken whenever the engine polls the queue)
     queue_depths: List[int] = dataclasses.field(default_factory=list)
+    # async serving: seconds from serving start to the first resolved
+    # result (None until observed)
+    time_to_first_result_s: Optional[float] = None
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
 
     # --- recording -------------------------------------------------------
     def observe_compile(self, hit: bool) -> None:
-        if hit:
-            self.compile_hits += 1
-        else:
-            self.compile_misses += 1
+        with self._lock:
+            if hit:
+                self.compile_hits += 1
+            else:
+                self.compile_misses += 1
 
     def observe_queue_depth(self, depth: int) -> None:
-        self.queue_depths.append(int(depth))
+        with self._lock:
+            self.queue_depths.append(int(depth))
+
+    def observe_first_result(self, elapsed_s: float) -> None:
+        """Record time-to-first-result once (later calls are no-ops)."""
+        with self._lock:
+            if self.time_to_first_result_s is None:
+                self.time_to_first_result_s = float(elapsed_s)
 
     def observe_batch(self, bucket: int, n_real: int, wall_s: float,
                       n_forwards: int, n_steps: int,
                       lane_full: Optional[List[int]] = None) -> None:
         """``n_forwards`` — batch forwards actually run (compute);
         ``lane_full`` — per-real-lane activated-step counts (quality)."""
-        if lane_full:
-            # spread across lanes of one batch: 0 under a batch-global
-            # decision, > 0 once lanes follow their own schedules
-            self.batch_lane_spread.append(max(lane_full) - min(lane_full))
-        self.batch_walls.append(float(wall_s))
-        self.batch_buckets.append(int(bucket))
-        self.batch_occupancy.append(n_real / max(bucket, 1))
-        # every lane (padded included) burns the compute of each batch
-        # forward, so the compute fraction is forwards-based
-        self.full_steps += int(n_forwards) * int(bucket)
-        self.total_steps += int(n_steps) * int(bucket)
+        with self._lock:
+            if lane_full:
+                # spread across lanes of one batch: 0 under a batch-global
+                # decision, > 0 once lanes follow their own schedules
+                self.batch_lane_spread.append(
+                    max(lane_full) - min(lane_full))
+            self.batch_walls.append(float(wall_s))
+            self.batch_buckets.append(int(bucket))
+            self.batch_occupancy.append(n_real / max(bucket, 1))
+            # every lane (padded included) burns the compute of each batch
+            # forward, so the compute fraction is forwards-based
+            self.full_steps += int(n_forwards) * int(bucket)
+            self.total_steps += int(n_steps) * int(bucket)
 
     def observe_request(self, wait_s: float, latency_s: float,
                         n_full: Optional[int] = None) -> None:
-        self.request_waits.append(float(wait_s))
-        self.request_latencies.append(float(latency_s))
-        if n_full is not None:
-            self.request_full_steps.append(int(n_full))
+        with self._lock:
+            self.request_waits.append(float(wait_s))
+            self.request_latencies.append(float(latency_s))
+            if n_full is not None:
+                self.request_full_steps.append(int(n_full))
 
     # --- aggregation -----------------------------------------------------
     @property
@@ -94,43 +113,53 @@ class ServeMetrics:
         return self.full_steps / max(self.total_steps, 1)
 
     def summary(self) -> Dict:
-        walls = self.batch_walls
-        lats = self.request_latencies
+        with self._lock:
+            walls = list(self.batch_walls)
+            lats = list(self.request_latencies)
+            waits = list(self.request_waits)
+            fulls = [float(v) for v in self.request_full_steps]
+            spread = list(self.batch_lane_spread)
+            buckets = list(self.batch_buckets)
+            occ = list(self.batch_occupancy)
+            depths = list(self.queue_depths)
+            ttfr = self.time_to_first_result_s
+            hits, misses = self.compile_hits, self.compile_misses
+            frac = self.full_steps / max(self.total_steps, 1)
         return {
-            "requests": self.n_requests,
-            "batches": self.n_batches,
-            "mean_occupancy": round(
-                sum(self.batch_occupancy) / max(self.n_batches, 1), 3),
-            "mean_bucket": round(
-                sum(self.batch_buckets) / max(self.n_batches, 1), 2),
+            "requests": len(lats),
+            "batches": len(walls),
+            "mean_occupancy": round(sum(occ) / max(len(walls), 1), 3),
+            "mean_bucket": round(sum(buckets) / max(len(walls), 1), 2),
             "batch_wall_p50_s": round(percentile(walls, 50), 4),
             "batch_wall_p95_s": round(percentile(walls, 95), 4),
             "request_latency_p50_s": round(percentile(lats, 50), 4),
             "request_latency_p95_s": round(percentile(lats, 95), 4),
-            "request_wait_p50_s": round(
-                percentile(self.request_waits, 50), 4),
-            "full_step_fraction": round(self.full_step_fraction(), 4),
-            "request_full_p50": percentile(
-                [float(v) for v in self.request_full_steps], 50),
-            "max_lane_full_spread": max(self.batch_lane_spread, default=0),
-            "compile_hits": self.compile_hits,
-            "compile_misses": self.compile_misses,
-            "max_queue_depth": max(self.queue_depths, default=0),
+            "request_wait_p50_s": round(percentile(waits, 50), 4),
+            "full_step_fraction": round(frac, 4),
+            "request_full_p50": percentile(fulls, 50),
+            "max_lane_full_spread": max(spread, default=0),
+            "compile_hits": hits,
+            "compile_misses": misses,
+            "max_queue_depth": max(depths, default=0),
+            "time_to_first_result_s": (None if ttfr is None
+                                       else round(ttfr, 4)),
         }
 
     def snapshot(self) -> "ServeMetrics":
         """Copy for before/after deltas (e.g. steady-state recompiles)."""
-        return dataclasses.replace(
-            self,
-            batch_walls=list(self.batch_walls),
-            batch_buckets=list(self.batch_buckets),
-            batch_occupancy=list(self.batch_occupancy),
-            batch_lane_spread=list(self.batch_lane_spread),
-            request_waits=list(self.request_waits),
-            request_latencies=list(self.request_latencies),
-            request_full_steps=list(self.request_full_steps),
-            queue_depths=list(self.queue_depths),
-        )
+        with self._lock:
+            return dataclasses.replace(
+                self,
+                batch_walls=list(self.batch_walls),
+                batch_buckets=list(self.batch_buckets),
+                batch_occupancy=list(self.batch_occupancy),
+                batch_lane_spread=list(self.batch_lane_spread),
+                request_waits=list(self.request_waits),
+                request_latencies=list(self.request_latencies),
+                request_full_steps=list(self.request_full_steps),
+                queue_depths=list(self.queue_depths),
+                _lock=threading.Lock(),
+            )
 
 
 def throughput(metrics: ServeMetrics, wall_s: float) -> Optional[float]:

@@ -9,12 +9,23 @@ and a lone request runs in the batch-1 program.
 Batch formation is deadline/age-based: a batch is cut when the queue
 can fill the largest bucket, when the oldest request has waited
 ``max_wait_s``, or when a per-request deadline is about to lapse.
-``flush=True`` cuts whatever is queued immediately (drain mode — the
-seed engine's behaviour).
+Deadline-lapsed requests are *promoted* into the cut batch wherever
+they sit in the queue (otherwise the batch is the stable FIFO prefix),
+so a lapsed request can never be starved behind ``max_batch`` younger
+ones.  ``flush=True`` cuts whatever is queued immediately (drain mode —
+the seed engine's behaviour).
+
+The queue is guarded by a condition variable (``cv``): ``submit`` /
+``form_batch`` / ``ready`` are safe to call from any thread, submitters
+wake anyone waiting on ``cv``, and ``seconds_until_ready`` tells a
+worker exactly how long it may sleep before age or deadline pressure
+would cut a batch — so the async engine blocks on wakeups instead of
+sleep-polling.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import List, NamedTuple, Optional
 
@@ -88,7 +99,11 @@ def bucket_for(n: int, max_batch: int) -> int:
 
 
 class Scheduler:
-    """FIFO request queue with age/deadline-triggered batch cutting."""
+    """FIFO request queue with age/deadline-triggered batch cutting.
+
+    Thread-safe: all queue access happens under ``cv`` (a reentrant
+    condition variable), and every ``submit`` notifies waiters.
+    """
 
     def __init__(self, max_batch: int = 8, max_wait_s: float = 0.05,
                  pad_to_max: bool = False, clock=time.monotonic):
@@ -98,45 +113,94 @@ class Scheduler:
         self.clock = clock
         self.queue: List[DiffusionRequest] = []
         self.submitted = 0
+        self.cv = threading.Condition(threading.RLock())
 
     def __len__(self) -> int:
-        return len(self.queue)
+        with self.cv:
+            return len(self.queue)
 
     @property
     def depth(self) -> int:
-        return len(self.queue)
+        return len(self)
 
     def submit(self, req: DiffusionRequest,
                now: Optional[float] = None) -> None:
-        req.submit_time = self.clock() if now is None else now
-        self.queue.append(req)
-        self.submitted += 1
+        with self.cv:
+            req.submit_time = self.clock() if now is None else now
+            self.queue.append(req)
+            self.submitted += 1
+            self.cv.notify_all()
+
+    def _lapsed(self, now: float) -> List[int]:
+        """Queue indices whose deadline has already passed."""
+        return [i for i, r in enumerate(self.queue)
+                if r.deadline_s is not None
+                and now - r.submit_time >= r.deadline_s]
 
     def _deadline_pressure(self, now: float) -> bool:
-        for r in self.queue:
-            if r.deadline_s is not None and \
-                    now - r.submit_time >= r.deadline_s:
-                return True
-        return False
+        return bool(self._lapsed(now))
 
     def ready(self, now: Optional[float] = None) -> bool:
         """Would ``form_batch`` cut a batch right now (without flushing)?"""
-        if not self.queue:
-            return False
-        now = self.clock() if now is None else now
-        if len(self.queue) >= self.max_batch:
-            return True
-        oldest_age = now - self.queue[0].submit_time
-        return oldest_age >= self.max_wait_s or self._deadline_pressure(now)
+        with self.cv:
+            if not self.queue:
+                return False
+            now = self.clock() if now is None else now
+            if len(self.queue) >= self.max_batch:
+                return True
+            oldest_age = now - self.queue[0].submit_time
+            return (oldest_age >= self.max_wait_s
+                    or self._deadline_pressure(now))
+
+    def seconds_until_ready(self, now: Optional[float] = None
+                            ) -> Optional[float]:
+        """How long until age/deadline pressure would cut a batch.
+
+        Returns ``None`` for an empty queue (nothing to wait for — a
+        submit will notify ``cv``), ``0.0`` if a batch is ready now, else
+        the soonest of (oldest request hitting ``max_wait_s``, earliest
+        deadline lapsing).  A worker can ``cv.wait(...)`` exactly this
+        long instead of sleep-polling.
+        """
+        with self.cv:
+            if not self.queue:
+                return None
+            now = self.clock() if now is None else now
+            if self.ready(now):
+                return 0.0
+            until = self.max_wait_s - (now - self.queue[0].submit_time)
+            for r in self.queue:
+                if r.deadline_s is not None:
+                    until = min(until,
+                                r.deadline_s - (now - r.submit_time))
+            return max(until, 0.0)
 
     def form_batch(self, now: Optional[float] = None,
                    flush: bool = False) -> Optional[BatchPlan]:
-        """Cut the next batch, or None if nothing is ready yet."""
-        now = self.clock() if now is None else now
-        if not self.queue or not (flush or self.ready(now)):
-            return None
-        take = min(len(self.queue), self.max_batch)
-        reqs, self.queue = self.queue[:take], self.queue[take:]
-        bucket = (self.max_batch if self.pad_to_max
-                  else bucket_for(take, self.max_batch))
-        return BatchPlan(requests=reqs, bucket=bucket, formed_at=now)
+        """Cut the next batch, or None if nothing is ready yet.
+
+        Deadline-lapsed requests are promoted into the cut wherever they
+        sit in the queue (a lapsed request beyond position ``max_batch``
+        used to trigger the cut yet be excluded from it — and could lapse
+        indefinitely under sustained load); the remaining slots are the
+        FIFO prefix, and the batch keeps stable FIFO order overall.
+        """
+        with self.cv:
+            now = self.clock() if now is None else now
+            if not self.queue or not (flush or self.ready(now)):
+                return None
+            take = min(len(self.queue), self.max_batch)
+            picked = self._lapsed(now)[:take]
+            picked_set = set(picked)
+            i = 0
+            while len(picked) < take:
+                if i not in picked_set:
+                    picked.append(i)
+                    picked_set.add(i)
+                i += 1
+            reqs = [self.queue[i] for i in sorted(picked)]  # stable FIFO
+            self.queue = [r for i, r in enumerate(self.queue)
+                          if i not in picked_set]
+            bucket = (self.max_batch if self.pad_to_max
+                      else bucket_for(take, self.max_batch))
+            return BatchPlan(requests=reqs, bucket=bucket, formed_at=now)

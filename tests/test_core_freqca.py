@@ -85,6 +85,37 @@ def test_nyquist_signal_is_all_high():
     assert e_low / e_tot < 0.02
 
 
+def test_low_pass_band_width_consistency():
+    """FFT and DCT decompose the same band for the same rho: kept-bin
+    counts agree within one bin (the FFT's conjugate-symmetry rounding —
+    DC + whole ± pairs — rounds an even target up, never down).
+    Regression: rho=0.5, n=8 used to keep 4 DCT bins but only 3 FFT
+    bins, so the two methods split different bands."""
+    for n, rho in [(8, 0.5), (16, 0.25), (32, 0.1), (64, 0.0625),
+                   (7, 0.5), (8, 1.0)]:
+        kept = {}
+        for method in ("fft", "dct"):
+            mask = frequency.low_pass_mask(n, rho, method)
+            kept[method] = int(jnp.sum(mask))
+            assert kept[method] == frequency.kept_bins(n, rho, method)
+        m = min(max(int(round(n * rho)), 1), n)
+        assert kept["dct"] == m
+        assert abs(kept["fft"] - kept["dct"]) <= 1
+        assert kept["fft"] >= kept["dct"]     # rounds up, never narrower
+
+
+@given(st.integers(min_value=2, max_value=128),
+       st.floats(min_value=0.01, max_value=1.0))
+def test_low_pass_kept_fraction_agrees(n, rho):
+    """Property: for any (n, rho) the FFT and DCT masks keep the same
+    fraction of the spectrum within one bin."""
+    kd = int(jnp.sum(frequency.low_pass_mask(n, rho, "dct")))
+    kf = int(jnp.sum(frequency.low_pass_mask(n, rho, "fft")))
+    assert kd == min(max(int(round(n * rho)), 1), n)
+    assert abs(kf - kd) <= 1
+    assert kd <= kf <= n
+
+
 def test_decompose_idempotent():
     """Low band of the low band is the low band (projection)."""
     z = jax.random.normal(jax.random.key(0), (1, 64, 8))

@@ -1,6 +1,11 @@
 """Continuous-batching serving tests: bucket selection, age/deadline
-batch formation, padded-lane isolation, the editing noising path, and
-the zero-steady-state-recompile guarantee (via the jit cache probe)."""
+batch formation (incl. the deadline-starvation promotion fix),
+padded-lane isolation, the editing noising path, the
+zero-steady-state-recompile guarantee (via the jit cache probe), and
+the threaded async submit path (futures resolve exactly once, ids
+conserved, lapsed deadlines served first)."""
+import threading
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,6 +16,7 @@ from repro.core.cache import CachePolicy
 from repro.data import synthetic
 from repro.diffusion import schedule
 from repro.serving import metrics as metrics_lib
+from repro.serving.async_engine import AsyncDiffusionEngine
 from repro.serving.engine import DiffusionEngine, DiffusionRequest
 from repro.serving.scheduler import Scheduler, bucket_for, bucket_sizes
 
@@ -92,6 +98,71 @@ def test_scheduler_deadline_and_flush():
     plan = sched2.form_batch(now=0.0, flush=True)
     assert plan.n_real == 3 and plan.bucket == 4
     assert len(sched2) == 0
+
+
+def test_scheduler_deadline_starvation_promotion():
+    """Regression: a deadline-lapsed request beyond position max_batch
+    used to trigger the cut yet be excluded from it (queue[:take]) —
+    under sustained load it could lapse indefinitely.  It must be
+    promoted into the cut batch, stable FIFO order otherwise."""
+    sched = Scheduler(max_batch=2, max_wait_s=100.0, clock=lambda: 0.0)
+    for i in range(2):
+        sched.submit(DiffusionRequest(request_id=i, seed=i), now=0.0)
+    # lapsed request sits at position 2, beyond max_batch=2
+    sched.submit(DiffusionRequest(request_id=2, seed=2, deadline_s=1.0),
+                 now=0.0)
+    assert sched.ready(now=5.0)
+    plan = sched.form_batch(now=5.0)
+    ids = [r.request_id for r in plan.requests]
+    assert 2 in ids, "lapsed request must be promoted into the cut"
+    assert ids == [0, 2]          # stable FIFO order among the picked
+    assert [r.request_id for r in sched.queue] == [1]
+
+    # sustained load: fresh undeadlined arrivals keep the queue full —
+    # the lapsed request still gets out in the very next cut
+    sched2 = Scheduler(max_batch=2, max_wait_s=0.0, clock=lambda: 0.0)
+    for i in range(4):
+        sched2.submit(DiffusionRequest(request_id=i, seed=i), now=0.0)
+    sched2.submit(DiffusionRequest(request_id=9, seed=9, deadline_s=0.5),
+                  now=0.0)
+    plan = sched2.form_batch(now=2.0)
+    assert 9 in [r.request_id for r in plan.requests]
+
+
+def test_scheduler_seconds_until_ready():
+    sched = Scheduler(max_batch=4, max_wait_s=10.0, clock=lambda: 0.0)
+    assert sched.seconds_until_ready(now=0.0) is None        # empty queue
+    sched.submit(DiffusionRequest(request_id=0, seed=0), now=0.0)
+    assert sched.seconds_until_ready(now=2.0) == pytest.approx(8.0)
+    sched.submit(DiffusionRequest(request_id=1, seed=1, deadline_s=3.0),
+                 now=2.0)
+    # deadline (at t=5) beats the age threshold (at t=10)
+    assert sched.seconds_until_ready(now=2.0) == pytest.approx(3.0)
+    assert sched.seconds_until_ready(now=6.0) == 0.0          # lapsed
+    assert sched.ready(now=6.0)
+
+
+def test_scheduler_thread_safe_submit():
+    sched = Scheduler(max_batch=8, max_wait_s=0.0)
+    n_threads, per_thread = 8, 50
+
+    def client(k):
+        for i in range(per_thread):
+            sched.submit(DiffusionRequest(request_id=k * per_thread + i,
+                                          seed=0))
+
+    threads = [threading.Thread(target=client, args=(k,))
+               for k in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sched.submitted == n_threads * per_thread
+    served = []
+    while sched.depth:
+        served.extend(sched.form_batch(flush=True).requests)
+    assert sorted(r.request_id for r in served) == \
+        list(range(n_threads * per_thread))
 
 
 def test_scheduler_pad_to_max_signature():
@@ -283,3 +354,145 @@ def test_uniform_nondefault_policy_collapses_signature(dit_fns):
         assert len(out) == 2
     # one new executable for the fora signature, reused on the repeat
     assert eng.metrics.compile_misses == misses + 1
+
+
+# ---------------------------------------------------------------------------
+# async engine
+# ---------------------------------------------------------------------------
+
+def test_async_submit_returns_future_immediately(dit_fns):
+    eng = make_engine(dit_fns, max_batch=2, max_wait_s=0.0)
+    eng.warmup()
+    with AsyncDiffusionEngine(eng) as aeng:
+        fut = aeng.submit(DiffusionRequest(request_id=7, seed=7))
+        res = fut.result(timeout=60)
+        assert res.request_id == 7
+        assert jnp.isfinite(res.latents).all()
+        assert fut.done()
+    # post-shutdown submits are refused, worker is stopped
+    with pytest.raises(RuntimeError):
+        aeng.submit(DiffusionRequest(request_id=8, seed=8))
+    s = eng.metrics.summary()
+    assert s["time_to_first_result_s"] is not None
+
+
+def test_async_stress_many_client_threads(dit_fns):
+    """N client threads submitting concurrently against a small ladder:
+    every future resolves exactly once, request ids are conserved, zero
+    steady-state recompiles, nothing lost or double-served."""
+    eng = make_engine(dit_fns, max_batch=4, max_wait_s=0.005)
+    eng.warmup()
+    warm_misses = eng.metrics.compile_misses
+    n_threads, per_thread = 4, 6
+    results, results_lock = [], threading.Lock()
+    futures = []
+
+    def on_done(f):
+        with results_lock:
+            results.append(f.result(timeout=0))
+
+    with AsyncDiffusionEngine(eng) as aeng:
+        def client(k):
+            futs = []
+            for i in range(per_thread):
+                rid = k * per_thread + i
+                fut = aeng.submit(DiffusionRequest(request_id=rid, seed=rid))
+                fut.add_done_callback(on_done)
+                futs.append(fut)
+            with results_lock:
+                futures.extend(futs)
+
+        threads = [threading.Thread(target=client, args=(k,))
+                   for k in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert aeng.drain(timeout=120)
+
+    total = n_threads * per_thread
+    assert len(futures) == total
+    # exactly-once: every future done, each id appears exactly once
+    assert all(f.done() for f in futures)
+    got = sorted(f.result(timeout=0).request_id for f in futures)
+    assert got == list(range(total))
+    # done-callbacks fired exactly once per future too
+    assert sorted(r.request_id for r in results) == list(range(total))
+    # ladder was warm: serving added zero steady-state recompiles
+    assert eng.metrics.compile_misses == warm_misses
+    assert eng.scheduler.depth == 0
+    assert eng.metrics.summary()["requests"] == total
+
+
+def test_async_deadline_lapsed_served_first(dit_fns):
+    """While the worker is busy, the queue overflows max_batch; when the
+    next batch is cut, the deadline-lapsed request is promoted into it
+    ahead of an earlier undeadlined one — which keeps waiting under the
+    long age threshold until drain."""
+    eng = make_engine(dit_fns, max_batch=2, max_wait_s=30.0)
+    eng.warmup()
+    aeng = AsyncDiffusionEngine(eng).start()
+    try:
+        # fills the largest bucket -> cut at once, worker goes busy
+        fa = aeng.submit(DiffusionRequest(request_id=10, seed=10))
+        fb = aeng.submit(DiffusionRequest(request_id=11, seed=11))
+        # these three land while the worker executes: queue > max_batch
+        f2 = aeng.submit(DiffusionRequest(request_id=2, seed=2))
+        f3 = aeng.submit(DiffusionRequest(request_id=3, seed=3))
+        f4 = aeng.submit(DiffusionRequest(request_id=4, seed=4,
+                                          deadline_s=0.0))   # lapses now
+        # next cut is [2, 4]: the lapsed request jumps FIFO position 3
+        assert f4.result(timeout=60).request_id == 4
+        assert f2.result(timeout=60).request_id == 2
+        assert fa.result(timeout=60).request_id == 10
+        assert fb.result(timeout=60).request_id == 11
+        assert not f3.done()       # still held back by the age threshold
+    finally:
+        aeng.shutdown(drain=True, timeout=120)
+    assert f3.result(timeout=0).request_id == 3   # drained on shutdown
+
+
+def test_async_client_cancel_does_not_kill_worker(dit_fns):
+    """A client cancelling a still-queued future must not crash the
+    worker when its batch is cut (the lane still runs; the cancelled
+    future just never gets a result) — later requests keep serving."""
+    eng = make_engine(dit_fns, max_batch=2, max_wait_s=0.0)
+    eng.warmup()
+    with AsyncDiffusionEngine(eng) as aeng:
+        # keep the worker busy so the next submits stay queued
+        f0 = aeng.submit(DiffusionRequest(request_id=0, seed=0))
+        f1 = aeng.submit(DiffusionRequest(request_id=1, seed=1))
+        f2 = aeng.submit(DiffusionRequest(request_id=2, seed=2))
+        cancelled = f2.cancel()    # races the cut: either way is legal
+        f3 = aeng.submit(DiffusionRequest(request_id=3, seed=3))
+        assert f3.result(timeout=60).request_id == 3   # worker alive
+        assert f0.result(timeout=60).request_id == 0
+        assert f1.result(timeout=60).request_id == 1
+        if cancelled:
+            assert f2.cancelled()
+        else:
+            assert f2.result(timeout=60).request_id == 2
+    # duplicate submission of the same pending object is refused
+    eng2 = make_engine(dit_fns, max_batch=2, max_wait_s=30.0)
+    eng2.warmup(buckets=[1])
+    aeng2 = AsyncDiffusionEngine(eng2).start()
+    try:
+        req = DiffusionRequest(request_id=0, seed=0)
+        aeng2.submit(req)
+        with pytest.raises(ValueError):
+            aeng2.submit(req)
+    finally:
+        aeng2.shutdown(drain=True, timeout=120)
+
+
+def test_async_shutdown_without_drain_cancels_queued(dit_fns):
+    eng = make_engine(dit_fns, max_batch=2, max_wait_s=30.0)
+    eng.warmup()
+    aeng = AsyncDiffusionEngine(eng).start()
+    fut = aeng.submit(DiffusionRequest(request_id=0, seed=0))
+    aeng.shutdown(drain=False, timeout=120)
+    # either served before the stop landed, or cancelled — never lost
+    assert fut.done()
+    if not fut.cancelled():
+        assert fut.result(timeout=0).request_id == 0
+    assert eng.scheduler.depth == 0
