@@ -32,9 +32,9 @@ def main(argv=None) -> None:
         _enable_smoke()
 
     from benchmarks import (fig2_freq_analysis, fig4_crf_mse, figc1_ablation,
-                            roofline, serve_throughput, table1_flux,
-                            table2_qwen, table3_kontext, table4_qwen_edit,
-                            table5_memory)
+                            kernel_bench, roofline, serve_throughput,
+                            table1_flux, table2_qwen, table3_kontext,
+                            table4_qwen_edit, table5_memory)
     csv = ["name,us_per_call,derived"]
 
     def headline(rows, pick="freqca(N=5)", metric="psnr"):
@@ -54,6 +54,9 @@ def main(argv=None) -> None:
     t5 = table5_memory.run()
     csv.append("table5_memory,0,freqca_pct=%s"
                % t5[-1]["pct_of_layerwise"])
+    kb = kernel_bench.run()
+    csv.append("kernel_bench,0,low_ring_compression=%s"
+               % kb[0]["low_ring_compression"])
     if not args.smoke:
         # fig2's low-band-similarity property only holds at the realistic
         # model scale, not the reduced smoke DiT

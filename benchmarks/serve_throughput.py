@@ -67,6 +67,7 @@ def run(out: str = "results/bench/BENCH_serve.json",
             "warmup_s": round(warm, 2),
             "warmup_compiles": warm_misses,
             "steady_recompiles": s["compile_misses"] - warm_misses,
+            "cache_state_bytes_per_lane": s["cache_state_bytes_per_lane"],
         }
 
     rows = []

@@ -92,6 +92,68 @@ def low_pass_mask(n: int, rho: float, method: Method) -> jnp.ndarray:
     return jnp.asarray(low_pass_mask_np(n, rho, method))
 
 
+def spectral_kept_bins(n: int, rho: float, method: Method) -> int:
+    """Rows of ``low_band_basis`` — the spectral low-ring width.
+
+    ``method="none"`` has an empty low band; a single all-zero basis row
+    keeps the cache state shapes static (the coefficients are exactly
+    zero, so reconstruction is unaffected).
+    """
+    if method == "none":
+        return 1
+    return kept_bins(n, rho, method)
+
+
+@functools.lru_cache(maxsize=16)
+def _low_band_basis_np(n: int, rho: float, method: Method) -> np.ndarray:
+    """Real orthonormal basis ``B: [m, n]`` spanning the low band.
+
+    The spatial low-pass projection factorises as ``L = Bᵀ B``: analysis
+    ``c = B x`` keeps only ``m = spectral_kept_bins(n, rho, method)``
+    spectral rows (the compressed cache representation — SpectralCache,
+    arXiv 2603.05315), synthesis ``Bᵀ c`` reconstructs the spatial low
+    band.  DCT: the first m rows of the orthonormal DCT-II basis.  FFT:
+    the real Fourier basis for the conjugate-symmetric kept set — DC,
+    then (cos, sin) row pairs per kept ±frequency pair (a lone
+    normalised cos row at Nyquist) — which spans exactly the same
+    subspace as the complex mask projection.
+    """
+    if method == "none":
+        return np.zeros((1, n), np.float64)
+    if method == "dct":
+        m = kept_bins(n, rho, method)
+        return _dct_basis_np(n)[:m]
+    assert method == "fft", method
+    mask = low_pass_mask_np(n, rho, "fft")
+    k = int(mask[1:(n // 2) + 1].sum())      # kept positive frequencies
+    i = np.arange(n, dtype=np.float64)
+    rows = [np.full(n, 1.0 / math.sqrt(n))]
+    for f in range(1, k + 1):
+        ang = 2.0 * np.pi * f * i / n
+        if 2 * f == n:                       # Nyquist: lone real mode
+            rows.append(np.cos(ang) / math.sqrt(n))
+        else:
+            rows.append(np.cos(ang) * math.sqrt(2.0 / n))
+            rows.append(np.sin(ang) * math.sqrt(2.0 / n))
+    basis = np.stack(rows)
+    assert basis.shape[0] == kept_bins(n, rho, "fft"), basis.shape
+    return basis
+
+
+def low_band_basis(n: int, rho: float, method: Method,
+                   dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.asarray(_low_band_basis_np(n, rho, method), dtype)
+
+
+def _kernel_dispatch_ok(z: jnp.ndarray, axis: int) -> bool:
+    """True when the Pallas band-split kernel can take this call: the
+    [B, S, D] token-axis layout with tile-compatible S and D."""
+    if z.ndim != 3 or axis not in (-2, 1):
+        return False
+    from repro.kernels import dct as dct_kernel  # lazy: dct imports us
+    return dct_kernel.band_split_dispatch_ok(z.shape[-2], z.shape[-1])
+
+
 def decompose(z: jnp.ndarray, rho: float, method: Method,
               axis: int = -2) -> Bands:
     """Split features into complementary low/high bands (paper eq. 1).
@@ -102,6 +164,15 @@ def decompose(z: jnp.ndarray, rho: float, method: Method,
     """
     if method == "none":
         return Bands(low=jnp.zeros_like(z), high=z)
+    if _kernel_dispatch_ok(z, axis):
+        # kernel-backed band split (REPRO_KERNELS=pallas): one fused
+        # projection matmul instead of the transform round-trip.  The
+        # pure path below stays the oracle the kernels are tested
+        # against (the dispatch layer only routes here when it is off).
+        from repro.kernels import ops
+        if ops.use_pallas():
+            low, high = ops.band_split(z, rho, method)
+            return Bands(low=low, high=high)
     n = z.shape[axis]
     mask = low_pass_mask(n, rho, method)
     shape = [1] * z.ndim

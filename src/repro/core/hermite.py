@@ -42,37 +42,59 @@ def normalize_times(ts: jnp.ndarray, t_query) -> jnp.ndarray:
     return (jnp.asarray(t_query, jnp.float32) - hi) / span
 
 
+def normal_system(ts: jnp.ndarray, order: int):
+    """Shared normal-equation setup for the least-squares Hermite fit.
+
+    Returns ``(basis [K, m+1], g [m+1, m+1])`` with Tikhonov jitter for
+    K > m+1 robustness — the single source used by ``fit_coefficients``,
+    ``predict``, and ``eval_weights`` (they must agree bit-for-bit so
+    the folded-weights kernel path matches the explicit fit).
+    """
+    s = normalize_times(ts, ts)                       # [K] in [-1, 0]
+    basis = hermite_basis(s, order)                   # [K, m+1]
+    g = basis.T @ basis + 1e-6 * jnp.eye(order + 1, dtype=jnp.float32)
+    return basis, g
+
+
 def fit_coefficients(ts: jnp.ndarray, values: jnp.ndarray, order: int):
     """Least-squares Hermite fit.
 
     ts: [K] timestamps of the cached history (diffusion step times);
     values: [K, ...] feature history.  Returns coeffs [order+1, ...].
     """
-    s = normalize_times(ts, ts)                       # [K] in [-1, 0]
-    basis = hermite_basis(s, order)                   # [K, m+1]
-    # normal equations with Tikhonov jitter for K > m+1 robustness;
+    basis, g = normal_system(ts, order)
     # shapes are kept intact (no reshape(k, -1)!) so sharded feature
     # dims survive — a flatten here turns into a full all-gather of the
-    # cache under GSPMD.
-    g = basis.T @ basis + 1e-6 * jnp.eye(order + 1, dtype=jnp.float32)
+    # cache under GSPMD.  The solve is moveaxis-only for the same
+    # reason: a transpose keeps the sharding, a reshape would not.
     rhs = jnp.einsum("km,k...->m...", basis, values.astype(jnp.float32))
-    inv_g = jnp.linalg.inv(g)                         # (m+1)x(m+1) — tiny
-    return jnp.einsum("nm,m...->n...", inv_g, rhs)
+    if rhs.ndim == 1:
+        return jnp.linalg.solve(g, rhs)
+    coeffs = jnp.linalg.solve(g, jnp.moveaxis(rhs, 0, -2))
+    return jnp.moveaxis(coeffs, -2, 0)
+
+
+def eval_weights(ts: jnp.ndarray, t_query, order: int) -> jnp.ndarray:
+    """Per-history scalar weights w st. prediction = sum_k w_k · hist_k.
+
+    Solving the normal equations G c = B^T v and evaluating b_q^T c is
+    linear in v, so the whole predictor folds into K scalars
+    w = B G^{-1} b_q — the host-side half of the fused cached-step
+    kernel (repro.kernels.freqca_fused).
+    """
+    basis, g = normal_system(ts, order)
+    s_q = normalize_times(ts, t_query)
+    basis_q = hermite_basis(s_q, order)               # [m+1]
+    return basis @ jnp.linalg.solve(g, basis_q)       # [K]
 
 
 def predict(ts: jnp.ndarray, values: jnp.ndarray, t_query, order: int):
     """Fit on (ts, values) history and evaluate at t_query. -> values[0]-like.
 
-    Equivalent to folding the solve into per-history scalar weights
-    w = B G^{-1} b_q (see kernels/freqca_fused.hermite_eval_weights) —
-    the prediction is linear in the cached history.
+    Implemented via the folded weights (``eval_weights``) — the
+    prediction is linear in the cached history.
     """
-    s = normalize_times(ts, ts)
-    basis = hermite_basis(s, order)                   # [K, m+1]
-    g = basis.T @ basis + 1e-6 * jnp.eye(order + 1, dtype=jnp.float32)
-    s_q = normalize_times(ts, t_query)
-    basis_q = hermite_basis(s_q, order)               # [m+1]
-    w = basis @ jnp.linalg.solve(g, basis_q)          # [K]
+    w = eval_weights(ts, t_query, order)
     out = jnp.einsum("k,k...->...", w, values.astype(jnp.float32))
     return out.astype(values.dtype)
 

@@ -32,8 +32,6 @@ from typing import Any, ClassVar, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import hermite
-
 
 class StepContext(NamedTuple):
     """Per-step observation handed to the policy inside the sampler scan.
@@ -55,41 +53,107 @@ class StepContext(NamedTuple):
 
 
 class Ring(NamedTuple):
-    """Lane-major ring of the K most recent activated features."""
-    vals: jnp.ndarray              # [B, K, *feat]
+    """Lane-major ring of the K most recent activated features.
+
+    Slots are **cyclic**: ``head[b]`` is the next slot lane ``b`` will
+    overwrite, so a push touches one slot (``dynamic_update_slice``)
+    instead of rewriting the whole ring the way the old ``jnp.roll``
+    implementation did — O(S·D) per activated step, not O(K·S·D).
+    Readers that need recency order (``ring_predict``) gather the slots
+    through ``ring_ordered`` so the maths — and the bits — match the
+    roll layout exactly.
+    """
+    vals: jnp.ndarray              # [B, K, *feat] cyclic slots
     ts: jnp.ndarray                # [B, K] activation timestamps
+    head: jnp.ndarray              # [B] int32 — next slot to write
 
 
 def ring_init(batch: int, k: int, feat_shape: Tuple[int, ...],
               dtype=jnp.float32) -> Ring:
     return Ring(vals=jnp.zeros((batch, k) + tuple(feat_shape), dtype),
-                ts=jnp.full((batch, k), -1.0, jnp.float32))
+                ts=jnp.full((batch, k), -1.0, jnp.float32),
+                head=jnp.zeros((batch,), jnp.int32))
 
 
 def ring_push(ring: Ring, value: jnp.ndarray, t) -> Ring:
-    """Push a ``[B, *feat]`` value observed at scalar time ``t``."""
-    vals = jnp.roll(ring.vals, -1, axis=1).at[:, -1].set(
-        value.astype(ring.vals.dtype))
-    ts = jnp.roll(ring.ts, -1, axis=1).at[:, -1].set(
-        jnp.asarray(t, jnp.float32))
-    return Ring(vals=vals, ts=ts)
+    """Push a ``[B, *feat]`` value observed at scalar time ``t``.
+
+    One slot written per lane (the per-lane ``dynamic_update_slice``
+    lowers to a scatter under vmap); everything else aliases through.
+    """
+    k = ring.vals.shape[1]
+
+    def write_one(vals, v, h):
+        return jax.lax.dynamic_update_slice(
+            vals, v[None].astype(vals.dtype),
+            (h,) + (jnp.zeros((), jnp.int32),) * (vals.ndim - 1))
+
+    vals = jax.vmap(write_one)(ring.vals, value, ring.head)
+    slot = jnp.arange(k)[None, :] == ring.head[:, None]
+    ts = jnp.where(slot, jnp.asarray(t, jnp.float32), ring.ts)
+    return Ring(vals=vals, ts=ts, head=(ring.head + 1) % k)
+
+
+def ring_order(ring: Ring) -> jnp.ndarray:
+    """[B, K] slot permutation, oldest -> newest (head is the oldest)."""
+    k = ring.ts.shape[1]
+    return (ring.head[:, None] + jnp.arange(k)[None, :]) % k
+
+
+def ring_ordered(ring: Ring) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(ts [B, K], vals [B, K, *feat]) gathered oldest -> newest —
+    identical layout to the old roll-based ring."""
+    idx = ring_order(ring)
+    ts = jnp.take_along_axis(ring.ts, idx, axis=1)
+    vidx = idx.reshape(idx.shape + (1,) * (ring.vals.ndim - 2))
+    vals = jnp.take_along_axis(ring.vals, vidx, axis=1)
+    return ts, vals
 
 
 def ring_last(ring: Ring) -> jnp.ndarray:
     """Most recent cached value per lane -> [B, *feat] (order-0 reuse)."""
-    return ring.vals[:, -1]
+    k = ring.vals.shape[1]
+    slot = (ring.head - 1) % k
+    idx = slot.reshape((-1,) + (1,) * (ring.vals.ndim - 1))
+    return jnp.take_along_axis(ring.vals, idx, axis=1)[:, 0]
+
+
+def ring_weights(ring: Ring, t_query, order: int) -> jnp.ndarray:
+    """Per-lane folded Hermite weights in recency order -> [B, K].
+
+    Lanes activate at different times under per-lane schedules, so each
+    carries its own timestamps; the per-lane normal-equation solve is
+    folded host-side into K scalars (``ops.hermite_weights``), making
+    prediction one contraction over the ring.
+    """
+    from repro.kernels import ops
+    idx = ring_order(ring)
+    ts = jnp.take_along_axis(ring.ts, idx, axis=1)
+    return ops.hermite_weights(ts, t_query, order)
+
+
+def ring_slot_weights(ring: Ring, t_query, order: int) -> jnp.ndarray:
+    """Folded per-lane Hermite weights indexed by ring **slot** — lets a
+    fused kernel consume ``ring.vals`` in memory order, permuting the K
+    scalars instead of gathering the K feature tensors."""
+    k = ring.ts.shape[1]
+    w = ring_weights(ring, t_query, order)
+    inv = (jnp.arange(k)[None, :] - ring.head[:, None]) % k
+    return jnp.take_along_axis(w, inv, axis=1)
 
 
 def ring_predict(ring: Ring, t_query, order: int) -> jnp.ndarray:
     """Per-lane Hermite forecast at ``t_query`` -> [B, *feat].
 
-    Lanes activate at different times under per-lane schedules, so each
-    lane carries its own timestamps and gets its own fit (vmapped; the
-    solve is a tiny (m+1)x(m+1) system per lane).
-    """
+    ``hermite.predict`` is itself the folded-weights evaluation
+    (w = B G⁻¹ b_q, then one FMA over the history), so this is the
+    reference twin of the fused kernel path driven by
+    ``ring_slot_weights`` — vmapped per lane, in recency order, to stay
+    bit-identical with the pre-pointer ring."""
+    from repro.core import hermite
+    ts, vals = ring_ordered(ring)
     return jax.vmap(
-        lambda ts, vals: hermite.predict(ts, vals, t_query, order)
-    )(ring.ts, ring.vals)
+        lambda t, v: hermite.predict(t, v, t_query, order))(ts, vals)
 
 
 def lane_select(mask: jnp.ndarray, new, old):

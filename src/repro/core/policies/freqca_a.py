@@ -17,13 +17,12 @@ from typing import NamedTuple, Tuple
 
 import jax.numpy as jnp
 
-from repro.core import frequency
 from repro.core.policies import base, registry
 from repro.core.policies.freqca import FreqCaPolicy
 
 
 class FreqCaAState(NamedTuple):
-    low: base.Ring                 # [B, K_low,  *feat]
+    low: base.Ring                 # [B, K_low,  *feat|m] SPECTRAL low band
     high: base.Ring                # [B, K_high, *feat]
     n_valid: jnp.ndarray           # [B] int32
     since: jnp.ndarray             # [B] int32 — steps since last full
@@ -40,7 +39,8 @@ class FreqCaAdaptivePolicy(FreqCaPolicy):
     def init(self, batch: int, feat_shape: Tuple[int, ...],
              crf_dtype=jnp.float32, **_):
         return FreqCaAState(
-            low=base.ring_init(batch, self.k_low, feat_shape, crf_dtype),
+            low=base.ring_init(batch, self.k_low,
+                               self.low_feat_shape(feat_shape), crf_dtype),
             high=base.ring_init(batch, self.k_high, feat_shape, crf_dtype),
             n_valid=jnp.zeros((batch,), jnp.int32),
             since=jnp.zeros((batch,), jnp.int32),
@@ -59,11 +59,10 @@ class FreqCaAdaptivePolicy(FreqCaPolicy):
         # score the prediction FreqCa would have made for THIS step
         # against the fresh CRF (self-calibration, free at full steps)
         err = base.lane_rel_norm(self.predict(state, ctx), crf)
-        bands = frequency.decompose(crf, self.rho, self.method,
-                                    axis=self.token_axis)
+        low_spec, high = self._split(crf)
         return state._replace(
-            low=base.ring_push(state.low, bands.low, ctx.t_now),
-            high=base.ring_push(state.high, bands.high, ctx.t_now),
+            low=base.ring_push(state.low, low_spec, ctx.t_now),
+            high=base.ring_push(state.high, high, ctx.t_now),
             n_valid=state.n_valid + 1,
             err_last=err)
 

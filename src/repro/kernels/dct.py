@@ -91,6 +91,21 @@ def band_split_basis(s: int, rho: float, method: str = "dct",
     return jnp.asarray(_band_split_basis_np(s, rho, method), dtype)
 
 
+def band_split_dispatch_ok(s: int, d: int, block: int = 128) -> bool:
+    """Shapes ``token_basis_matmul``'s default tiling accepts — keep in
+    sync with its ``block_*=128`` defaults (it asserts divisibility at
+    trace time, so dispatch layers must pre-check here)."""
+    return s % min(block, s) == 0 and d % min(block, d) == 0
+
+
+def spectral_dispatch_ok(s: int, d: int, block: int = 256) -> bool:
+    """Shapes the spectral kernels' default tiling accepts
+    (``band_split_spectral`` block_d and
+    ``freqca_fused.freqca_predict_fused_spectral`` block_s/block_d are
+    all 256)."""
+    return d % min(block, d) == 0 and s % min(block, s) == 0
+
+
 def band_split(x: jnp.ndarray, rho: float, method: str = "dct",
                interpret: bool = True):
     """FreqCa band split as a single tiled matmul: returns (low, high)."""
@@ -98,3 +113,64 @@ def band_split(x: jnp.ndarray, rho: float, method: str = "dct",
     basis = band_split_basis(s, rho, method)
     low = token_basis_matmul(basis, x, interpret=interpret)
     return low, x - low
+
+
+# ---------------------------------------------------------------------------
+# spectral band split: (low coefficients, spatial high) in one pass
+# ---------------------------------------------------------------------------
+
+def _band_split_spectral_kernel(basis_ref, x_ref, low_ref, high_ref):
+    """basis [m, S]; x [S, bd] -> low = B·x [m, bd], high = x − Bᵀ·low.
+
+    Both outputs come out of ONE read of the x tile: the analysis
+    matmul produces the compressed low-band coefficients directly (no
+    S×S projection matmul, no spatial low band ever materialised) and
+    the synthesis-transpose matmul immediately yields the high
+    residual."""
+    x = x_ref[...].astype(jnp.float32)
+    b = basis_ref[...].astype(jnp.float32)
+    low = jnp.dot(b, x, preferred_element_type=jnp.float32)
+    low_ref[...] = low.astype(low_ref.dtype)
+    recon = jnp.dot(b.T, low, preferred_element_type=jnp.float32)
+    high_ref[...] = (x - recon).astype(high_ref.dtype)
+
+
+def band_split_spectral(x: jnp.ndarray, rho: float, method: str = "dct",
+                        block_d: int = 256, interpret: bool = True):
+    """Fused spectral band split: ``(low_spec [B, m, D], high [B, S, D])``.
+
+    ``m = frequency.spectral_kept_bins(S, rho, method)`` — the low band
+    lives in the frequency domain at a ``rho`` fraction of the spatial
+    footprint (the SpectralCache representation).  The token axis is
+    VMEM-resident per tile (S·block_d floats), so the grid runs over D
+    tiles only; ``low + high`` reconstruction means
+    ``Bᵀ·low_spec + high == x`` to float round-off.
+    """
+    _, s, d = x.shape
+    basis = frequency.low_band_basis(s, rho, method)
+    m = basis.shape[0]
+    bd = min(block_d, d)
+    assert d % bd == 0, (d, bd)
+    grid = (d // bd,)
+
+    def run_one(x2):  # [S, D]
+        return pl.pallas_call(
+            _band_split_spectral_kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((m, s), lambda j: (0, 0)),
+                pl.BlockSpec((s, bd), lambda j: (0, j)),
+            ],
+            out_specs=[
+                pl.BlockSpec((m, bd), lambda j: (0, j)),
+                pl.BlockSpec((s, bd), lambda j: (0, j)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((m, d), x.dtype),
+                jax.ShapeDtypeStruct((s, d), x.dtype),
+            ],
+            interpret=interpret,
+        )(basis, x2)
+
+    low, high = jax.vmap(run_one)(x)
+    return low, high

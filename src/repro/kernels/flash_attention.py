@@ -23,6 +23,14 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def dispatch_ok(s: int, q_block: int = 128, kv_block: int = 128) -> bool:
+    """Self-attention shapes ``flash_attention``'s default tiling
+    accepts (it asserts ``s % qb == 0`` at trace time) — dispatch
+    layers pre-check here so the predicate can't drift from the block
+    defaults."""
+    return s % min(q_block, s) == 0 and s % min(kv_block, s) == 0
+
+
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
                   *, causal: bool, window: int, kb: int, nk: int,
                   scale: float):

@@ -32,16 +32,11 @@ def _fused_kernel(w_ref, low_ref, hist_ref, o_ref):
 def hermite_eval_weights(ts: jnp.ndarray, t_query, order: int) -> jnp.ndarray:
     """Weights w st. prediction = sum_k w_k · hist_k (least-squares fold).
 
-    Solving the normal equations G c = B^T v and evaluating b_q^T c is
-    linear in v, so the whole predictor folds into per-history-entry
-    scalars: w = B G^{-1} b_q.
+    Alias of :func:`repro.core.hermite.eval_weights` — the shared
+    normal-equation setup lives there so the folded kernel path and the
+    explicit fit can never drift apart.
     """
-    s = hermite.normalize_times(ts, ts)
-    basis = hermite.hermite_basis(s, order)            # [K, m+1]
-    g = basis.T @ basis + 1e-6 * jnp.eye(order + 1, dtype=jnp.float32)
-    s_q = hermite.normalize_times(ts, t_query)
-    b_q = hermite.hermite_basis(s_q, order)            # [m+1]
-    return basis @ jnp.linalg.solve(g, b_q)            # [K]
+    return hermite.eval_weights(ts, t_query, order)
 
 
 def freqca_predict_fused(low: jnp.ndarray, high_hist: jnp.ndarray,
@@ -74,3 +69,60 @@ def freqca_predict_fused(low: jnp.ndarray, high_hist: jnp.ndarray,
         )(w, low2, hist2)
 
     return jax.vmap(run_one, in_axes=(0, 1))(low, high_hist)
+
+
+# ---------------------------------------------------------------------------
+# spectral cached step: synthesis matmul fused with the Hermite FMA
+# ---------------------------------------------------------------------------
+
+def _fused_spectral_kernel(w_ref, synth_ref, low_ref, hist_ref, o_ref):
+    """synth [bs, m]; low [m, bd]; hist [K, bs, bd]; w [K].
+
+    ẑ tile = synth·low + Σ_k w_k hist_k — the low band is synthesised
+    from its m spectral rows on the MXU inside the same pass that FMAs
+    the K high-band history tiles, so the cached step reads only
+    K·S·D + m·D + S·m floats from HBM and writes S·D once."""
+    acc = jnp.dot(synth_ref[...].astype(jnp.float32),
+                  low_ref[...].astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    k = hist_ref.shape[0]
+    for i in range(k):                      # K is tiny & static: unrolled FMA
+        acc += w_ref[i] * hist_ref[i].astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def freqca_predict_fused_spectral(low_spec: jnp.ndarray, synth: jnp.ndarray,
+                                  high_hist: jnp.ndarray, w: jnp.ndarray,
+                                  block_s: int = 256, block_d: int = 256,
+                                  interpret: bool = True) -> jnp.ndarray:
+    """ẑ = synthᵀ-reconstructed low band + per-lane Hermite(high), fused.
+
+    low_spec: [B, m, D] spectral low-band coefficients (already combined
+    across the low ring — order 0 is just the freshest entry);
+    synth: [S, m] synthesis basis (``frequency.low_band_basis(S).T``);
+    high_hist: [B, K, S, D]; w: [B, K] per-lane folded Hermite weights
+    (lanes activate at different times, so each carries its own fold).
+    """
+    b, kh, s, d = high_hist.shape
+    bs = min(block_s, s)
+    bd = min(block_d, d)
+    assert s % bs == 0 and d % bd == 0, (s, d, bs, bd)
+    m = synth.shape[1]
+    grid = (s // bs, d // bd)
+
+    def run_one(w1, low1, hist1):  # [K], [m, D], [K, S, D]
+        return pl.pallas_call(
+            _fused_spectral_kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((kh,), lambda i, j: (0,)),
+                pl.BlockSpec((bs, m), lambda i, j: (i, 0)),
+                pl.BlockSpec((m, bd), lambda i, j: (0, j)),
+                pl.BlockSpec((kh, bs, bd), lambda i, j: (0, i, j)),
+            ],
+            out_specs=pl.BlockSpec((bs, bd), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((s, d), high_hist.dtype),
+            interpret=interpret,
+        )(w1, synth, low1, hist1)
+
+    return jax.vmap(run_one)(w.astype(jnp.float32), low_spec, high_hist)

@@ -25,6 +25,28 @@ def freqca_predict_ref(low: jnp.ndarray, high_hist: jnp.ndarray,
             + high.astype(jnp.float32)).astype(low.dtype)
 
 
+def band_split_spectral_ref(x: jnp.ndarray, rho: float,
+                            method: str = "dct"):
+    """(low_spec [B, m, D], high [B, S, D]) — the spectral split oracle
+    (and the XLA dispatch path): two einsums against the low basis."""
+    basis = frequency.low_band_basis(x.shape[-2], rho, method)
+    xf = x.astype(jnp.float32)
+    low_spec = jnp.einsum("ms,bsd->bmd", basis, xf)
+    high = xf - jnp.einsum("ms,bmd->bsd", basis, low_spec)
+    return low_spec.astype(x.dtype), high.astype(x.dtype)
+
+
+def freqca_predict_spectral_ref(low_spec: jnp.ndarray, synth: jnp.ndarray,
+                                high_hist: jnp.ndarray,
+                                w: jnp.ndarray) -> jnp.ndarray:
+    """ẑ = synth·low_spec + Σ_k w[b, k]·high_hist[b, k] (per lane)."""
+    low = jnp.einsum("sm,bmd->bsd", synth.astype(jnp.float32),
+                     low_spec.astype(jnp.float32))
+    high = jnp.einsum("bk,bksd->bsd", w.astype(jnp.float32),
+                      high_hist.astype(jnp.float32))
+    return (low + high).astype(high_hist.dtype)
+
+
 def ssd_chunked_ref(x, dt, A, B, C, chunk: int):
     """Delegates to the model's pure-jnp chunked SSD (itself validated
     against the naive per-token recurrence in tests)."""

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import DiTConfig, ModelConfig
+from repro.kernels import ops
 from repro.models import attention, blocks, common
 from repro.models.common import ParamSpec
 
@@ -107,12 +108,28 @@ def _qkv_heads(p, x, n_heads):
     return q, k, v
 
 
+# flash-kernel threshold: below this, full-logits attention is cheaper
+# than the kernel's tiling overhead (cf. attention._BLOCKWISE_MIN_SEQ)
+_FLASH_MIN_SEQ = 1024
+
+
+def _flash_ok(s: int) -> bool:
+    from repro.kernels import flash_attention as fa
+    return s >= _FLASH_MIN_SEQ and fa.dispatch_ok(s)
+
+
 def _joint_attention(q, k, v, p_out, x_dtype):
     b, s, nh, hd = q.shape
-    logits = jnp.einsum("bshk,bthk->bhst", q.astype(jnp.float32),
-                        k.astype(jnp.float32)) / math.sqrt(hd)
-    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
-    out = jnp.einsum("bhst,bthk->bshk", probs, v)
+    if ops.use_pallas() and _flash_ok(s):
+        # non-causal flash attention: logits tiles stay in VMEM instead
+        # of materialising the [B, H, S, S] tensor (q_per_kv=1 — the
+        # joint streams share full MHA)
+        out = ops.flash(q, k, v, 1, causal=False)
+    else:
+        logits = jnp.einsum("bshk,bthk->bhst", q.astype(jnp.float32),
+                            k.astype(jnp.float32)) / math.sqrt(hd)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhst,bthk->bshk", probs, v)
     return jnp.einsum("bshk,hkd->bsd", out, p_out.astype(x_dtype))
 
 

@@ -100,6 +100,23 @@ class DiffusionEngine:
             return lanes[0]
         return lanes
 
+    def state_bytes(self, batch: int = 1) -> int:
+        """Real cache-state footprint of the engine policy for a
+        ``batch``-lane bucket — the number Table-5/``ServeMetrics``
+        report.  With the spectral FreqCa cache the low ring holds
+        ``m = kept_bins(S, rho)`` coefficient rows instead of S spatial
+        rows, so this is ~``rho`` of the spatial figure for the low
+        band."""
+        from repro.core.policies import registry as policy_registry
+        pol = policy_registry.resolve(self.policy)
+        state = jax.eval_shape(
+            lambda: pol.init(batch, self.crf_shape, self.crf_dtype,
+                             latent_shape=self.latent_shape,
+                             latent_dtype=jnp.float32))
+        # the policy's own accounting hook (works on the eval_shape
+        # pytree: ShapeDtypeStruct carries .size and .dtype)
+        return pol.state_bytes(state)
+
     # --- compile-cache management ---------------------------------------
     @property
     def buckets(self) -> List[int]:
@@ -126,6 +143,7 @@ class DiffusionEngine:
         zero steady-state recompiles.
         """
         t0 = time.perf_counter()
+        self.metrics.observe_state_bytes(self.state_bytes(batch=1))
         sigs = [(b, self.policy) for b in (buckets or self.buckets)]
         for lanes in lane_policy_sets:
             lanes = tuple(lanes)

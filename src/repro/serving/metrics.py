@@ -52,6 +52,9 @@ class ServeMetrics:
     # async serving: seconds from serving start to the first resolved
     # result (None until observed)
     time_to_first_result_s: Optional[float] = None
+    # actual per-lane cache-state footprint of the engine's policy
+    # (spectral low ring included) — set once at warmup
+    cache_state_bytes_per_lane: Optional[int] = None
     _lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False)
 
@@ -72,6 +75,11 @@ class ServeMetrics:
         with self._lock:
             if self.time_to_first_result_s is None:
                 self.time_to_first_result_s = float(elapsed_s)
+
+    def observe_state_bytes(self, nbytes: int) -> None:
+        """Record the engine policy's real per-lane cache footprint."""
+        with self._lock:
+            self.cache_state_bytes_per_lane = int(nbytes)
 
     def observe_batch(self, bucket: int, n_real: int, wall_s: float,
                       n_forwards: int, n_steps: int,
@@ -123,6 +131,7 @@ class ServeMetrics:
             occ = list(self.batch_occupancy)
             depths = list(self.queue_depths)
             ttfr = self.time_to_first_result_s
+            state_bytes = self.cache_state_bytes_per_lane
             hits, misses = self.compile_hits, self.compile_misses
             frac = self.full_steps / max(self.total_steps, 1)
         return {
@@ -143,6 +152,7 @@ class ServeMetrics:
             "max_queue_depth": max(depths, default=0),
             "time_to_first_result_s": (None if ttfr is None
                                        else round(ttfr, 4)),
+            "cache_state_bytes_per_lane": state_bytes,
         }
 
     def snapshot(self) -> "ServeMetrics":

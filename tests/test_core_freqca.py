@@ -116,6 +116,29 @@ def test_low_pass_kept_fraction_agrees(n, rho):
     assert kd <= kf <= n
 
 
+def test_low_band_basis_factorises_projection():
+    """B: [m, n] orthonormal rows with L = BᵀB — the spectral cache
+    representation spans exactly the masked-transform low band."""
+    for method in ("fft", "dct"):
+        for n, rho in [(16, 0.25), (64, 0.0625), (8, 0.5), (8, 1.0),
+                       (7, 0.5)]:
+            b = np.asarray(frequency._low_band_basis_np(n, rho, method))
+            assert b.shape == (frequency.spectral_kept_bins(n, rho,
+                                                            method), n)
+            np.testing.assert_allclose(b @ b.T, np.eye(b.shape[0]),
+                                       atol=1e-10)
+            z = np.asarray(jax.random.normal(jax.random.key(3), (2, n, 4)))
+            low = np.einsum("ms,bsd->bmd", b, z)
+            recon = np.einsum("ms,bmd->bsd", b, low)
+            bands = frequency.decompose(jnp.asarray(z), rho, method)
+            np.testing.assert_allclose(recon, np.asarray(bands.low),
+                                       atol=1e-5)
+    # method="none": an all-zero basis row — empty low band, static shape
+    b = np.asarray(frequency._low_band_basis_np(16, 0.25, "none"))
+    assert b.shape == (1, 16) and not b.any()
+    assert frequency.spectral_kept_bins(16, 0.25, "none") == 1
+
+
 def test_decompose_idempotent():
     """Low band of the low band is the low band (projection)."""
     z = jax.random.normal(jax.random.key(0), (1, 64, 8))

@@ -24,6 +24,7 @@ def test_dct_kernel_matches_ref(s, d, dtype):
                                np.asarray(y_ref, np.float32), atol=atol)
 
 
+@pytest.mark.pallas
 @pytest.mark.parametrize("method", ["dct", "fft"])
 @pytest.mark.parametrize("s,rho", [(64, 0.0625), (128, 0.125), (256, 0.25)])
 def test_band_split_kernel_matches_decompose(method, s, rho):
@@ -33,6 +34,41 @@ def test_band_split_kernel_matches_decompose(method, s, rho):
     np.testing.assert_allclose(np.asarray(low), np.asarray(low_r), atol=5e-5)
     np.testing.assert_allclose(np.asarray(high), np.asarray(high_r),
                                atol=5e-5)
+
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("method", ["dct", "fft", "none"])
+@pytest.mark.parametrize("s,rho", [(64, 0.0625), (128, 0.125), (256, 0.25)])
+def test_band_split_spectral_matches_decompose(method, s, rho):
+    """Fused (low_spec, high) kernel vs the pure decompose oracle: the
+    synthesised low band and the high residual must both match, and
+    low + high must still reconstruct the input."""
+    x = jax.random.normal(jax.random.key(21), (2, s, 32))
+    low_spec, high = dct_kernel.band_split_spectral(x, rho, method)
+    assert low_spec.shape == (2, frequency.spectral_kept_bins(s, rho,
+                                                              method), 32)
+    bands = frequency.decompose(x, rho, method)
+    basis = frequency.low_band_basis(s, rho, method)
+    low = jnp.einsum("ms,bmd->bsd", basis, low_spec)
+    np.testing.assert_allclose(np.asarray(low), np.asarray(bands.low),
+                               atol=5e-5)
+    np.testing.assert_allclose(np.asarray(high), np.asarray(bands.high),
+                               atol=5e-5)
+    np.testing.assert_allclose(np.asarray(low + high), np.asarray(x),
+                               atol=5e-5)
+
+
+@pytest.mark.pallas
+def test_band_split_spectral_kernel_matches_ref():
+    """Pallas kernel vs the jnp twin the XLA dispatch path runs."""
+    x = jax.random.normal(jax.random.key(22), (2, 128, 64))
+    for method in ("dct", "fft"):
+        lk, hk = dct_kernel.band_split_spectral(x, 0.0625, method)
+        lr, hr = ref.band_split_spectral_ref(x, 0.0625, method)
+        np.testing.assert_allclose(np.asarray(lk), np.asarray(lr),
+                                   atol=5e-5)
+        np.testing.assert_allclose(np.asarray(hk), np.asarray(hr),
+                                   atol=5e-5)
 
 
 def test_band_split_projection_idempotent():
@@ -69,6 +105,39 @@ def test_fused_weights_equal_full_solve():
     direct = hermite.predict(ts, vals, 0.2, 2)
     np.testing.assert_allclose(np.asarray(folded), np.asarray(direct),
                                atol=1e-4)
+    # fit_coefficients (solve-based, satellite bugfix) agrees with the
+    # folded evaluation on multi-dim AND 1-d feature shapes
+    coeffs = hermite.fit_coefficients(ts, vals, 2)
+    via_fit = hermite.predict_from_coeffs(coeffs, ts, 0.2, 2)
+    np.testing.assert_allclose(np.asarray(via_fit), np.asarray(direct),
+                               atol=1e-4)
+    c1 = hermite.fit_coefficients(ts, vals[:, 0, 0], 2)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(coeffs[:, 0, 0]),
+                               atol=1e-5)
+
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("k,order", [(3, 2), (4, 2)])
+def test_fused_spectral_predict_matches_ring(k, order):
+    """Extended fused kernel (spectral low + synthesis basis + per-lane
+    folded weights over the slot-ordered ring) vs ring_predict + add."""
+    from repro.core.policies import base as policy_base
+    s, d, rho, b = 64, 32, 0.125, 2
+    ring = policy_base.ring_init(b, k, (s, d))
+    rng = jax.random.key(30)
+    # push k+1 values so the ring head wraps (slot order != recency)
+    for i, t in enumerate(jnp.linspace(1.0, 0.4, k + 1)):
+        rng, sub = jax.random.split(rng)
+        ring = policy_base.ring_push(
+            ring, jax.random.normal(sub, (b, s, d)), t)
+    basis = frequency.low_band_basis(s, rho, "dct")
+    low_spec = jax.random.normal(jax.random.key(31), (b, basis.shape[0], d))
+    w = policy_base.ring_slot_weights(ring, 0.3, order)
+    y = freqca_fused.freqca_predict_fused_spectral(
+        low_spec, basis.T, ring.vals, w, block_s=32, block_d=32)
+    want = (jnp.einsum("sm,bmd->bsd", basis.T, low_spec)
+            + policy_base.ring_predict(ring, 0.3, order))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=1e-4)
 
 
 @pytest.mark.parametrize("s,chunk", [(32, 8), (64, 16), (128, 32),
@@ -96,6 +165,40 @@ def test_ops_wrappers_jit():
     np.testing.assert_allclose(np.asarray(lo + hi), np.asarray(x), atol=1e-5)
 
 
+def test_ops_backend_read_lazily(monkeypatch):
+    """Satellite: dispatch must honour REPRO_KERNELS flips without a
+    module reimport (INTERPRET was frozen at import time before)."""
+    monkeypatch.delenv("REPRO_KERNELS", raising=False)
+    assert ops.backend() in ("pallas", "xla")
+    monkeypatch.setenv("REPRO_KERNELS", "pallas")
+    assert ops.backend() == "pallas" and ops.use_pallas()
+    monkeypatch.setenv("REPRO_KERNELS", "xla")
+    assert ops.backend() == "xla" and not ops.use_pallas()
+    monkeypatch.setenv("REPRO_KERNELS", "cuda")
+    with pytest.raises(ValueError):
+        ops.backend()
+    # INTERPRET is a lazy attribute now, driven by the env override
+    monkeypatch.setenv("REPRO_KERNELS_INTERPRET", "0")
+    assert ops.INTERPRET is False
+    monkeypatch.setenv("REPRO_KERNELS_INTERPRET", "1")
+    assert ops.INTERPRET is True
+
+
+@pytest.mark.pallas
+def test_ops_band_split_spectral_backends_agree(monkeypatch):
+    """The same call routed through both backends returns the same
+    split (the pallas jits carry interpret/backend as static args, so
+    flipping the env between calls cannot serve a stale executable)."""
+    x = jax.random.normal(jax.random.key(40), (2, 128, 64))
+    outs = {}
+    for be in ("xla", "pallas"):
+        monkeypatch.setenv("REPRO_KERNELS", be)
+        outs[be] = ops.band_split_spectral(x, 0.125, "dct")
+    for a, b in zip(outs["xla"], outs["pallas"]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5)
+
+
+@pytest.mark.pallas
 @pytest.mark.parametrize("s,hq,hkv", [(64, 4, 2), (128, 8, 8), (64, 6, 2)])
 @pytest.mark.parametrize("causal,window", [(True, 0), (True, 24),
                                            (False, 0)])
@@ -115,6 +218,28 @@ def test_flash_attention_matches_sdpa(s, hq, hkv, causal, window):
                              window=window, q_block=32, kv_block=32)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
                                atol=5e-5)
+
+
+@pytest.mark.pallas
+def test_dit_joint_attention_flash_routing(monkeypatch):
+    """models.dit routes joint attention to the flash kernel above the
+    threshold under REPRO_KERNELS=pallas — outputs must match the
+    full-logits einsum path."""
+    from repro.models import dit
+    b, s, nh, hd = 1, 128, 2, 16
+    q = jax.random.normal(jax.random.key(50), (b, s, nh, hd))
+    k = jax.random.normal(jax.random.key(51), (b, s, nh, hd))
+    v = jax.random.normal(jax.random.key(52), (b, s, nh, hd))
+    p_out = jax.random.normal(jax.random.key(53), (nh, hd, nh * hd)) * 0.1
+    monkeypatch.setenv("REPRO_KERNELS", "xla")
+    want = dit._joint_attention(q, k, v, p_out, jnp.float32)
+    monkeypatch.setenv("REPRO_KERNELS", "pallas")
+    monkeypatch.setattr(dit, "_FLASH_MIN_SEQ", 64)
+    got = dit._joint_attention(q, k, v, p_out, jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-5)
+    # below the threshold the einsum path serves even under pallas
+    monkeypatch.setattr(dit, "_FLASH_MIN_SEQ", 4096)
+    assert not dit._flash_ok(s)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
