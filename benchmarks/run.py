@@ -74,10 +74,10 @@ def main(argv=None) -> None:
     csv.append("serve_throughput,0,bucketed_speedup=%s"
                % sv[1]["speedup_vs_padmax"])
     svm = serve_throughput.run_mixed(
-        n_requests=9 if args.smoke else 12,
+        n_requests=12 if args.smoke else 24,
         max_batch=4 if args.smoke else 8)
-    csv.append("serve_mixed,0,lane_spread=%s"
-               % svm[0]["max_lane_full_spread"])
+    csv.append("serve_mixed,0,grouped_rps_ratio=%s"
+               % svm[1]["rps_vs_ungrouped"])
     sva = serve_throughput.run_async(
         n_requests=14 if args.smoke else 26,
         max_batch=4 if args.smoke else 8)

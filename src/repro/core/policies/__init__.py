@@ -15,6 +15,7 @@ from repro.core.policies.freqca import FreqCaPolicy  # noqa: F401
 from repro.core.policies.freqca_a import FreqCaAdaptivePolicy  # noqa: F401
 from repro.core.policies.none import NoCachePolicy  # noqa: F401
 from repro.core.policies.registry import (PolicyBank, available,  # noqa: F401
-                                          bank, register, resolve)
+                                          bank, compatibility_key, register,
+                                          resolve)
 from repro.core.policies.taylorseer import TaylorSeerPolicy  # noqa: F401
 from repro.core.policies.teacache import TeaCachePolicy  # noqa: F401

@@ -219,6 +219,27 @@ class Policy:
         raise NotImplementedError
 
     # --- metadata --------------------------------------------------------
+    def compatibility_key(self) -> Tuple:
+        """Hashable batch-compatibility signature for the scheduler.
+
+        Two requests may share a policy-homogeneous batch iff their
+        policies' keys are equal.  Static-schedule policies
+        (``per_lane=False``) are keyed by the activation schedule they
+        produce — ``(interval, needed_history)`` — because their
+        ``decide`` masks depend only on ``step_idx`` and the
+        deterministically advancing ``n_valid``, so same-key lanes
+        activate on exactly the same steps and never force a forward the
+        others didn't already schedule (e.g. ``fora(interval=1)`` and
+        ``none`` are one family).  Adaptive policies key on their full
+        value: a data-dependent mask can only share a batch with lanes
+        budgeting errors the identical way — anything looser reintroduces
+        the every-lane-pays-for-one-activation coupling grouping exists
+        to remove.
+        """
+        if self.per_lane:
+            return ("adaptive", self)
+        return ("sched", self.interval, self.needed_history)
+
     @property
     def needed_history(self) -> int:
         """Activated steps required before prediction is well-posed —

@@ -66,6 +66,14 @@ def resolve(policy) -> base.Policy:
     return _FACTORIES[kind](policy)
 
 
+def compatibility_key(policy) -> Tuple:
+    """Batch-compatibility key of a policy or spec (see
+    :meth:`~repro.core.policies.base.Policy.compatibility_key`).  The
+    scheduler groups requests by this key so every cut batch is
+    policy-homogeneous."""
+    return resolve(policy).compatibility_key()
+
+
 # ---------------------------------------------------------------------------
 # per-lane banks
 # ---------------------------------------------------------------------------
@@ -75,6 +83,11 @@ class PolicyBank:
     scalar_decision: bool
     always_full: bool
     batch: int
+
+    def compatibility_key(self):
+        """Single key when every lane is batch-compatible, else the
+        per-lane key tuple (only ungrouped schedulers cut such banks)."""
+        raise NotImplementedError
 
     def init(self, feat_shape, crf_dtype, latent_shape, latent_dtype):
         raise NotImplementedError
@@ -98,6 +111,9 @@ class UniformBank(PolicyBank):
         self.batch = batch
         self.scalar_decision = not policy.per_lane
         self.always_full = policy.name == "none"
+
+    def compatibility_key(self):
+        return self.policy.compatibility_key()
 
     def init(self, feat_shape, crf_dtype, latent_shape, latent_dtype):
         return self.policy.init(self.batch, feat_shape, crf_dtype,
@@ -127,6 +143,10 @@ class MixedBank(PolicyBank):
         self.batch = len(self.policies)
         self.scalar_decision = False
         self.always_full = all(p.name == "none" for p in self.policies)
+
+    def compatibility_key(self):
+        keys = tuple(p.compatibility_key() for p in self.policies)
+        return keys[0] if all(k == keys[0] for k in keys) else keys
 
     def init(self, feat_shape, crf_dtype, latent_shape, latent_dtype):
         return tuple(p.init(1, feat_shape, crf_dtype,

@@ -23,8 +23,14 @@ Three client shapes:
   immediately and the engine's worker overlaps the clients.
 
 ``--mixed-policies`` assigns per-request cache policies (freqca / fora
-/ freqca_a cycling) so lanes in one batch follow their own activation
-schedules.
+/ freqca_a cycling).  By default the scheduler forms
+**policy-homogeneous** batches (compatibility grouping): each cut is
+pure, one warmed ladder per policy group covers every signature the
+stream can produce (O(groups x buckets) executables instead of one per
+round-robin window), and scheduled lanes never pay for adaptive lanes'
+activations.  ``--ungrouped`` restores the mixed-lane batch former
+(lanes in one batch follow their own activation schedules, one jit
+signature per lane-policy mix — warmed via ``cyclic_signatures``).
 
   PYTHONPATH=src python -m repro.launch.serve --requests 16 --interval 5
   PYTHONPATH=src python -m repro.launch.serve --arrival poisson --rate 2
@@ -117,11 +123,15 @@ def serve_stream(eng: DiffusionEngine, bursts) -> tuple:
 
 
 def cyclic_signatures(policies, max_batch: int):
-    """Every per-lane policy set a FIFO batch former can cut from a
-    round-robin assignment: windows of the policy cycle (any offset, any
-    real-lane count), padded to their bucket with the window's first
-    policy — the engine's padding rule.  Warming these makes open-loop
-    serving compile-free no matter where arrivals split the batches."""
+    """Every per-lane policy set an UNGROUPED FIFO batch former can cut
+    from a round-robin assignment: windows of the policy cycle (any
+    offset, any real-lane count), padded to their bucket with the
+    window's first policy — the engine's padding rule.  Warming these
+    makes ungrouped open-loop serving compile-free no matter where
+    arrivals split the batches; it is also the O(mixes x buckets)
+    signature blowup the policy-homogeneous former avoids (grouped,
+    ``warmup(policies=...)`` — one uniform ladder per group — covers
+    the same stream)."""
     from repro.serving.scheduler import bucket_for
     seen, sets = set(), []
     k = len(policies)
@@ -222,6 +232,10 @@ def main():
     ap.add_argument("--mixed-policies", action="store_true",
                     help="cycle per-request policies (freqca/fora/freqca_a)"
                          " — lanes in one batch keep their own schedules")
+    ap.add_argument("--ungrouped", action="store_true",
+                    help="disable policy-homogeneous batch formation "
+                         "(mixed-lane batches, one jit signature per "
+                         "lane-policy mix — the pre-grouping baseline)")
     args = ap.parse_args()
 
     if args.requests < 1:
@@ -246,7 +260,8 @@ def main():
                                (size, size, cfg.in_channels),
                                (n_tokens, cfg.d_model), policy,
                                n_steps=args.steps, max_batch=args.batch,
-                               max_wait_s=args.max_wait)
+                               max_wait_s=args.max_wait,
+                               group_policies=not args.ungrouped)
 
     default_pol = CachePolicy(kind="freqca", interval=args.interval,
                               method=args.method)
@@ -263,13 +278,21 @@ def main():
     for name, eng in [("freqca", eng_freqca), ("full", eng_full)]:
         pols = policies if name == "freqca" else None
         # mixed-policy batches add (bucket, lane-policy) signatures the
-        # default ladder doesn't cover; warm them all so the timed phase
-        # is compile-free however arrivals split the batches
-        sets = cyclic_signatures(pols, args.batch) if pols else ()
-        warm = eng.warmup(lane_policy_sets=sets)
-        n_exec = len(eng.buckets) + len(sets)
+        # default ladder doesn't cover.  Grouped (the default), a
+        # policy-pure former only ever cuts uniform signatures: one
+        # ladder per compatibility group covers the whole stream.
+        # Ungrouped, every round-robin window the FIFO former can cut
+        # is its own mix — warm them all via cyclic_signatures.
+        sets = cyclic_signatures(pols, args.batch) \
+            if pols and args.ungrouped else ()
+        warm = eng.warmup(lane_policy_sets=sets,
+                          policies=pols if pols and not args.ungrouped
+                          else ())
+        n_exec = eng.compiled_buckets()
         print(f"[{name:7s}] warmup: {n_exec} executables "
-              f"({len(eng.buckets)} buckets x policy mixes) in {warm:.1f}s")
+              f"({len(eng.buckets)} buckets x "
+              f"{'policy groups' if not args.ungrouped else 'policy mixes'}"
+              f") in {warm:.1f}s")
         if args.arrival == "poisson":
             plan = poisson_stream(args.requests, args.rate, size,
                                   cfg.in_channels,
@@ -295,11 +318,17 @@ def main():
         print(f"[{name:7s}] occupancy {s['mean_occupancy']:.2f}  "
               f"latency p50/p95 {s['request_latency_p50_s']:.3f}/"
               f"{s['request_latency_p95_s']:.3f}s  "
-              f"full-step frac {s['full_step_fraction']:.2f}  "
+              f"skip-compute {s['skip_compute_fraction']:.2f}  "
               f"lane spread {s['max_lane_full_spread']}  "
               f"compiles {s['compile_misses']} "
-              f"(steady-state hits {s['compile_hits']})"
+              f"(steady-state hits {s['compile_hits']}, "
+              f"signatures {s['compiled_signatures']})"
               + (f"  ttfr {ttfr:.3f}s" if ttfr is not None else ""))
+        if s["policy_groups"]:
+            for key, g in s["per_group"].items():
+                print(f"          group {key}: {g['requests']} reqs in "
+                      f"{g['batches']} batches, occupancy "
+                      f"{g['mean_occupancy']:.2f}")
 
     f_outs, f_wall = results["freqca"]
     u_outs, u_wall = results["full"]

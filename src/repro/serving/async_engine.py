@@ -11,7 +11,11 @@
   variable and wakes on submits or exactly when age/deadline pressure
   would cut a batch (``Scheduler.seconds_until_ready``) — no
   sleep-polling, and deadline-lapsed requests are promoted into the
-  next cut by the scheduler.
+  next cut by the scheduler.  Under a policy-grouping scheduler the
+  worker executes one plan per compatibility group back to back (each
+  cut is policy-pure; a drain flushes the remaining groups one cut at
+  a time), so clients of different policies never share — or pay for —
+  each other's activations.
 * results stream back as batches complete: each future is resolved by
   the worker the moment its batch's device work finishes, so clients
   overlap the engine instead of replaying a plan serially.
@@ -83,8 +87,10 @@ class AsyncDiffusionEngine:
         self.shutdown(drain=exc_type is None)
 
     def warmup(self, buckets: Optional[Sequence[int]] = None,
-               lane_policy_sets: Sequence[Sequence[object]] = ()) -> float:
-        return self.engine.warmup(buckets, lane_policy_sets)
+               lane_policy_sets: Sequence[Sequence[object]] = (),
+               policies: Sequence[object] = ()) -> float:
+        return self.engine.warmup(buckets, lane_policy_sets,
+                                  policies=policies)
 
     # --- submit path -----------------------------------------------------
     def submit(self, req: DiffusionRequest,

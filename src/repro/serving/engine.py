@@ -10,7 +10,14 @@ through a per-lane policy bank (repro.core.policies), every request
 gets its own activation schedule and per-request ``n_full_steps``
 accounting, and a uniform batch collapses to the single-policy
 signature so the default ladder is exactly one executable per bucket —
-zero steady-state recompiles once a signature is warm.  The input
+zero steady-state recompiles once a signature is warm.  By default
+(``group_policies=True``) the scheduler cuts **policy-homogeneous**
+batches — one compatibility group per cut — so mixed streams compile
+O(groups x buckets) signatures (warm them with
+``warmup(policies=[...])``, one ladder per group) and static-schedule
+lanes never pay for adaptive lanes' activations;
+``group_policies=False`` keeps the ungrouped mixed-lane former (one
+signature per lane-policy mix, the pre-grouping baseline).  The input
 buffer is donated (``donate_argnums=0``) so the noise batch is reused
 as sampler scratch.  When a ``jax.sharding.Mesh`` is supplied the batch
 is placed via ``repro.sharding.partitioning.batch_spec`` so GSPMD
@@ -62,7 +69,8 @@ class DiffusionEngine:
                  latent_shape, crf_shape, policy: CachePolicy,
                  n_steps: int = 50, max_batch: int = 8,
                  crf_dtype=jnp.float32, max_wait_s: float = 0.0,
-                 pad_to_max: bool = False, mesh=None):
+                 pad_to_max: bool = False, mesh=None,
+                 group_policies: bool = True):
         self.full_fn = full_fn
         self.from_crf_fn = from_crf_fn
         self.latent_shape = tuple(latent_shape)      # [H, W, C]
@@ -72,9 +80,12 @@ class DiffusionEngine:
         self.max_batch = max_batch
         self.crf_dtype = crf_dtype
         self.mesh = mesh
+        self.group_policies = group_policies
         self.scheduler = Scheduler(max_batch=max_batch,
                                    max_wait_s=max_wait_s,
-                                   pad_to_max=pad_to_max)
+                                   pad_to_max=pad_to_max,
+                                   group_policies=group_policies,
+                                   default_policy=policy)
         self.metrics = ServeMetrics()
         self._ts = schedule.timesteps(n_steps)
 
@@ -132,11 +143,22 @@ class DiffusionEngine:
             return -1
 
     def warmup(self, buckets: Optional[Sequence[int]] = None,
-               lane_policy_sets: Sequence[Sequence[object]] = ()) -> float:
+               lane_policy_sets: Sequence[Sequence[object]] = (),
+               policies: Sequence[object] = ()) -> float:
         """Precompile sampler executables for every bucket signature on
         the default policy, plus any extra per-lane policy signatures
         (``lane_policy_sets``: each entry is a full per-lane assignment
-        whose length must be a bucket size).
+        whose length must be a bucket size), plus a full per-bucket
+        ladder for every extra uniform policy in ``policies`` — the
+        grouped-serving warmup: a policy-homogeneous batch former cuts
+        uniform signatures whenever a group is a single policy value,
+        so one ladder per policy value covers the whole stream
+        (O(groups x buckets) executables instead of one per lane-policy
+        mix).  Static families that mix distinct member values in one
+        cut (``fora(interval=1)`` + ``none``) compile one extra
+        signature per policy *composition* on first use — the scheduler
+        canonicalizes lane order so interleavings collapse — cached for
+        the process lifetime; pre-warm those with ``lane_policy_sets``.
 
         Returns wall seconds spent.  After warmup, serving any mix of
         batch sizes — and any warmed policy mix — hits the jit cache:
@@ -145,6 +167,9 @@ class DiffusionEngine:
         t0 = time.perf_counter()
         self.metrics.observe_state_bytes(self.state_bytes(batch=1))
         sigs = [(b, self.policy) for b in (buckets or self.buckets)]
+        for pol in policies:
+            sigs.extend((b, pol) for b in self.buckets
+                        if pol != self.policy)
         for lanes in lane_policy_sets:
             lanes = tuple(lanes)
             if len(lanes) not in self.buckets:
@@ -158,6 +183,7 @@ class DiffusionEngine:
             out.block_until_ready()
             self.metrics.observe_compile(
                 hit=self.compiled_buckets() == cache_before)
+        self.metrics.observe_compiled_signatures(self.compiled_buckets())
         return time.perf_counter() - t0
 
     # --- request path ----------------------------------------------------
@@ -204,9 +230,11 @@ class DiffusionEngine:
         wall = time.perf_counter() - t0
         self.metrics.observe_compile(
             hit=self.compiled_buckets() == cache_before)
+        self.metrics.observe_compiled_signatures(self.compiled_buckets())
         self.metrics.observe_batch(
             plan.bucket, plan.n_real, wall, int(n_forwards), self.n_steps,
-            lane_full=[int(v) for v in lane_full[:plan.n_real]])
+            lane_full=[int(v) for v in lane_full[:plan.n_real]],
+            group_key=plan.group_key)
         out = []
         for i, r in enumerate(plan.requests):   # padded lanes never leak
             wait = max(0.0, plan.formed_at - r.submit_time)

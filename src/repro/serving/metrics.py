@@ -1,13 +1,23 @@
 """Serving metrics: queue depth, batch occupancy, latency percentiles,
 full-step fraction, per-request full-step counts, time-to-first-result,
-and compile-cache accounting.
+compile-cache accounting, and policy-group accounting.
 
 Compute and quality are tracked separately now that activation is
 per-lane: ``full_step_fraction`` charges every lane of a batch for each
 *batch forward* (padded lanes burn the compute whenever any lane
 activates), while ``request_full_steps`` records how many steps each
 individual request actually activated — the per-request number that
-differs across lanes in a mixed-policy batch.
+differs across lanes in a mixed-policy batch.  The complement,
+``skip_compute_fraction``, is the number the policy-homogeneous batch
+former raises on mixed streams: grouped, a scheduled lane's batch only
+forwards on its own schedule instead of the union of every lane's.
+
+``compiled_signatures`` is the engine's jit-cache probe
+(``DiffusionEngine.compiled_buckets()``), pushed after every warmup and
+executed batch, so the grouping win — distinct signatures <=
+policy-groups x buckets — is observable in ``summary()`` rather than
+inferred from compile hit/miss deltas.  ``per_group`` aggregates batch
+counts / served requests / occupancy per compatibility group.
 
 One ``ServeMetrics`` instance per engine.  Recording is cheap (python
 lists + counters) and thread-safe — client threads and the async
@@ -55,6 +65,10 @@ class ServeMetrics:
     # actual per-lane cache-state footprint of the engine's policy
     # (spectral low ring included) — set once at warmup
     cache_state_bytes_per_lane: Optional[int] = None
+    # latest jit-cache probe (None until pushed; -1 = probe unavailable)
+    compiled_signatures: Optional[int] = None
+    # per compatibility group: [n_batches, n_requests, occupancy_sum]
+    group_batches: Dict = dataclasses.field(default_factory=dict)
     _lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False)
 
@@ -81,12 +95,27 @@ class ServeMetrics:
         with self._lock:
             self.cache_state_bytes_per_lane = int(nbytes)
 
+    def observe_compiled_signatures(self, n: int) -> None:
+        """Record the engine's jit-cache probe (distinct compiled
+        (bucket, lane-policy) signatures so far)."""
+        with self._lock:
+            self.compiled_signatures = int(n)
+
     def observe_batch(self, bucket: int, n_real: int, wall_s: float,
                       n_forwards: int, n_steps: int,
-                      lane_full: Optional[List[int]] = None) -> None:
+                      lane_full: Optional[List[int]] = None,
+                      group_key=None) -> None:
         """``n_forwards`` — batch forwards actually run (compute);
-        ``lane_full`` — per-real-lane activated-step counts (quality)."""
+        ``lane_full`` — per-real-lane activated-step counts (quality);
+        ``group_key`` — the compatibility group this batch was cut from
+        (None under the ungrouped former)."""
         with self._lock:
+            if group_key is not None:
+                g = self.group_batches.setdefault(str(group_key),
+                                                  [0, 0, 0.0])
+                g[0] += 1
+                g[1] += int(n_real)
+                g[2] += n_real / max(bucket, 1)
             if lane_full:
                 # spread across lanes of one batch: 0 under a batch-global
                 # decision, > 0 once lanes follow their own schedules
@@ -134,6 +163,11 @@ class ServeMetrics:
             state_bytes = self.cache_state_bytes_per_lane
             hits, misses = self.compile_hits, self.compile_misses
             frac = self.full_steps / max(self.total_steps, 1)
+            signatures = self.compiled_signatures
+            per_group = {
+                k: {"batches": g[0], "requests": g[1],
+                    "mean_occupancy": round(g[2] / max(g[0], 1), 3)}
+                for k, g in self.group_batches.items()}
         return {
             "requests": len(lats),
             "batches": len(walls),
@@ -145,10 +179,14 @@ class ServeMetrics:
             "request_latency_p95_s": round(percentile(lats, 95), 4),
             "request_wait_p50_s": round(percentile(waits, 50), 4),
             "full_step_fraction": round(frac, 4),
+            "skip_compute_fraction": round(1.0 - frac, 4),
             "request_full_p50": percentile(fulls, 50),
             "max_lane_full_spread": max(spread, default=0),
             "compile_hits": hits,
             "compile_misses": misses,
+            "compiled_signatures": signatures,
+            "policy_groups": len(per_group),
+            "per_group": per_group,
             "max_queue_depth": max(depths, default=0),
             "time_to_first_result_s": (None if ttfr is None
                                        else round(ttfr, 4)),
@@ -168,6 +206,8 @@ class ServeMetrics:
                 request_latencies=list(self.request_latencies),
                 request_full_steps=list(self.request_full_steps),
                 queue_depths=list(self.queue_depths),
+                group_batches={k: list(v)
+                               for k, v in self.group_batches.items()},
                 _lock=threading.Lock(),
             )
 

@@ -15,6 +15,26 @@ so a lapsed request can never be starved behind ``max_batch`` younger
 ones.  ``flush=True`` cuts whatever is queued immediately (drain mode —
 the seed engine's behaviour).
 
+With ``group_policies=True`` the former partitions the queue into
+**compatibility groups** (``Policy.compatibility_key()``: identical
+resolved policies, or static-schedule families whose activation masks
+coincide — e.g. ``fora(interval=1)`` / ``none``) and every cut batch is
+policy-homogeneous.  This caps the compiled-signature count at
+O(groups x buckets) instead of one signature per lane-policy *mix*
+(family cuts that mix distinct member values add one signature per
+policy *composition* — lane order is canonicalized at cut time so
+arrival interleaving never mints a new one), and static-schedule lanes
+stop paying for adaptive lanes' activations (the sampler runs a full
+forward whenever any lane in the batch activates).
+Group choice per cut: (1) a lapsed deadline wins — the most-overdue
+request's group is cut with its lapsed members promoted; (2) age
+pressure (and ``flush``) cuts the group of the oldest request overall,
+so a rare policy is served the moment its request heads the queue and
+can never be starved by a busier group; (3) a full bucket alone cuts
+the full group with the earliest-submitted member.  Within the chosen
+group the batch is the lapsed members plus the FIFO prefix, in stable
+FIFO order — exactly the ungrouped rule applied to the group.
+
 The queue is guarded by a condition variable (``cv``): ``submit`` /
 ``form_batch`` / ``ready`` are safe to call from any thread, submitters
 wake anyone waiting on ``cv``, and ``seconds_until_ready`` tells a
@@ -51,6 +71,7 @@ class BatchPlan(NamedTuple):
     requests: List[DiffusionRequest]
     bucket: int          # padded batch signature the engine will run
     formed_at: float     # scheduler clock when the batch was cut
+    group_key: object = None   # compatibility group this cut came from
 
     @property
     def n_real(self) -> int:
@@ -103,17 +124,25 @@ class Scheduler:
 
     Thread-safe: all queue access happens under ``cv`` (a reentrant
     condition variable), and every ``submit`` notifies waiters.
+
+    ``group_policies=True`` turns on policy-homogeneous batch formation
+    (see the module docstring); ``default_policy`` is what a request
+    with ``policy=None`` resolves to for grouping.
     """
 
     def __init__(self, max_batch: int = 8, max_wait_s: float = 0.05,
-                 pad_to_max: bool = False, clock=time.monotonic):
+                 pad_to_max: bool = False, clock=time.monotonic,
+                 group_policies: bool = False, default_policy=None):
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
         self.pad_to_max = pad_to_max  # seed-compatible fixed signature
         self.clock = clock
+        self.group_policies = group_policies
+        self.default_policy = default_policy
         self.queue: List[DiffusionRequest] = []
         self.submitted = 0
         self.cv = threading.Condition(threading.RLock())
+        self._key_cache: dict = {}   # policy/spec -> compatibility key
 
     def __len__(self) -> int:
         with self.cv:
@@ -140,13 +169,47 @@ class Scheduler:
     def _deadline_pressure(self, now: float) -> bool:
         return bool(self._lapsed(now))
 
+    def group_key(self, req: DiffusionRequest):
+        """Compatibility-group key of a request's (resolved) policy."""
+        pol = req.policy if req.policy is not None else self.default_policy
+        if pol is None:
+            return None
+        key = self._key_cache.get(pol)
+        if key is None:
+            from repro.core.policies import registry
+            key = self._key_cache[pol] = registry.compatibility_key(pol)
+        return key
+
+    def groups(self) -> dict:
+        """Queued request count per compatibility group (one pseudo-group
+        of the whole queue when grouping is off)."""
+        with self.cv:
+            if not self.group_policies:
+                return {None: len(self.queue)} if self.queue else {}
+            counts: dict = {}
+            for r in self.queue:
+                k = self.group_key(r)
+                counts[k] = counts.get(k, 0) + 1
+            return counts
+
+    def _full_group(self) -> bool:
+        """Can some (group-pure) cut fill the largest bucket right now?"""
+        if not self.group_policies:
+            return len(self.queue) >= self.max_batch
+        return any(n >= self.max_batch for n in self.groups().values())
+
     def ready(self, now: Optional[float] = None) -> bool:
-        """Would ``form_batch`` cut a batch right now (without flushing)?"""
+        """Would ``form_batch`` cut a batch right now (without flushing)?
+
+        Under ``group_policies`` the full-queue trigger becomes a
+        full-*group* trigger: ten requests spread over three groups fill
+        no policy-pure bucket, so only age/deadline pressure cuts.
+        """
         with self.cv:
             if not self.queue:
                 return False
             now = self.clock() if now is None else now
-            if len(self.queue) >= self.max_batch:
+            if self._full_group():
                 return True
             oldest_age = now - self.queue[0].submit_time
             return (oldest_age >= self.max_wait_s
@@ -175,6 +238,31 @@ class Scheduler:
                                 r.deadline_s - (now - r.submit_time))
             return max(until, 0.0)
 
+    def _cut_group(self, now: float, flush: bool):
+        """(key, member queue-indices in FIFO order) of the next cut."""
+        keys = [self.group_key(r) for r in self.queue]
+        lapsed = self._lapsed(now)
+        if lapsed:
+            # a lapsed deadline wins: the most-overdue request's group
+            # is the next cut (its lapsed members get promoted below)
+            j = max(lapsed, key=lambda i: now - self.queue[i].submit_time
+                    - self.queue[i].deadline_s)
+            key = keys[j]
+        elif flush or now - self.queue[0].submit_time >= self.max_wait_s:
+            # age pressure / drain: FIFO across groups — the oldest
+            # request's group, so a rare policy is served as soon as its
+            # request heads the queue and can never be starved by a
+            # busier group
+            key = keys[0]
+        else:
+            # full-bucket trigger alone: the full group with the
+            # earliest-submitted member
+            counts: dict = {}
+            for k in keys:
+                counts[k] = counts.get(k, 0) + 1
+            key = next(k for k in keys if counts[k] >= self.max_batch)
+        return key, [i for i, k in enumerate(keys) if k == key]
+
     def form_batch(self, now: Optional[float] = None,
                    flush: bool = False) -> Optional[BatchPlan]:
         """Cut the next batch, or None if nothing is ready yet.
@@ -184,23 +272,58 @@ class Scheduler:
         used to trigger the cut yet be excluded from it — and could lapse
         indefinitely under sustained load); the remaining slots are the
         FIFO prefix, and the batch keeps stable FIFO order overall.
+
+        Under ``group_policies`` the same rule is applied to the members
+        of one compatibility group (chosen by ``_cut_group``), so every
+        emitted batch is policy-pure and lapsed requests of *other*
+        groups are served by the immediately following cuts — deadline
+        priority picks their group next.
         """
         with self.cv:
             now = self.clock() if now is None else now
             if not self.queue or not (flush or self.ready(now)):
                 return None
-            take = min(len(self.queue), self.max_batch)
-            picked = self._lapsed(now)[:take]
+            if self.group_policies:
+                key, members = self._cut_group(now, flush)
+            else:
+                key, members = None, range(len(self.queue))
+            lapsed_set = set(self._lapsed(now))
+            take = min(len(members), self.max_batch)
+            picked = [i for i in members if i in lapsed_set][:take]
             picked_set = set(picked)
-            i = 0
-            while len(picked) < take:
+            for i in members:
+                if len(picked) >= take:
+                    break
                 if i not in picked_set:
                     picked.append(i)
                     picked_set.add(i)
-                i += 1
             reqs = [self.queue[i] for i in sorted(picked)]  # stable FIFO
+            if self.group_policies:
+                reqs = self._canonical_lane_order(reqs)
             self.queue = [r for i, r in enumerate(self.queue)
                           if i not in picked_set]
             bucket = (self.max_batch if self.pad_to_max
                       else bucket_for(take, self.max_batch))
-            return BatchPlan(requests=reqs, bucket=bucket, formed_at=now)
+            return BatchPlan(requests=reqs, bucket=bucket, formed_at=now,
+                             group_key=key)
+
+    def _canonical_lane_order(self, reqs: List[DiffusionRequest]
+                              ) -> List[DiffusionRequest]:
+        """Canonical lane order for a family cut mixing distinct member
+        policies (e.g. ``fora(interval=1)`` + ``none``).
+
+        Lane order inside one cut is semantically free — lanes run
+        simultaneously and results map back per request — so the lanes
+        are stable-sorted by policy value: the engine's jit signature
+        then depends on the batch's policy *composition* only, never on
+        arrival interleaving (one executable per composition instead of
+        one per ordering).  Value-pure cuts (the common case) pass
+        through untouched, and FIFO order is preserved within each
+        policy value.
+        """
+        pols = [r.policy if r.policy is not None else self.default_policy
+                for r in reqs]
+        if all(p == pols[0] for p in pols):
+            return reqs
+        order = sorted(range(len(reqs)), key=lambda i: repr(pols[i]))
+        return [reqs[i] for i in order]

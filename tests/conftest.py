@@ -8,3 +8,9 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax
 
 jax.config.update("jax_enable_x64", False)
+
+# The "ci" hypothesis profile must exist at pytest-configure time for
+# the CI property job's --hypothesis-profile=ci flag; the single
+# definition lives in hypothesis_compat (derandomized, deadline=None),
+# which also shims st/given for the bare no-hypothesis tier-1 env.
+import hypothesis_compat  # noqa: E402,F401

@@ -7,30 +7,9 @@ import pytest
 
 # property tests skip gracefully when hypothesis is absent (CI installs
 # it via `pip install -e .[dev]`; the bare tier-1 env may not have it)
-# while the deterministic tests below keep running either way
-try:
-    import hypothesis
-    import hypothesis.strategies as st
-    from hypothesis import given
-
-    hypothesis.settings.register_profile(
-        "ci", deadline=None, max_examples=25,
-        suppress_health_check=list(hypothesis.HealthCheck))
-    hypothesis.settings.load_profile("ci")
-except ImportError:
-    class _AnyStrategy:
-        def __getattr__(self, name):
-            return lambda *a, **k: None
-
-    st = _AnyStrategy()   # strategy expressions in decorators still eval
-
-    def given(*a, **k):
-        def deco(fn):
-            def skipper():
-                pytest.importorskip("hypothesis")
-            skipper.__name__ = fn.__name__
-            return skipper
-        return deco
+# while the deterministic tests below keep running either way; the
+# shared "ci" profile and no-hypothesis shim live in hypothesis_compat
+from hypothesis_compat import given, st  # noqa: E402
 
 from repro.core import cache as cache_lib
 from repro.core import frequency, hermite

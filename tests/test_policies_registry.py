@@ -69,6 +69,43 @@ def test_policy_metadata_matches_spec():
                        high_order=4).resolve().needed_history == 5
 
 
+def test_compatibility_keys():
+    """Batch-compatibility grouping: static-schedule policies key by the
+    activation schedule they produce (so mask-identical families share),
+    adaptive policies key by full value (data-dependent masks only share
+    with the identical policy)."""
+    key = policies.compatibility_key
+    # identical resolved policies -> identical keys, spec or object
+    assert key(CachePolicy(kind="freqca", interval=5)) == \
+        key(CachePolicy(kind="freqca", interval=5).resolve())
+    # same (interval, needed_history) static schedule -> one family,
+    # across different predictors
+    assert key(CachePolicy(kind="freqca", interval=5)) == \
+        key(CachePolicy(kind="taylorseer", interval=5))
+    assert key(CachePolicy(kind="fora", interval=1)) == \
+        key(CachePolicy(kind="none"))
+    # schedule differences split the family
+    assert key(CachePolicy(kind="fora", interval=2)) != \
+        key(CachePolicy(kind="fora", interval=3))
+    assert key(CachePolicy(kind="fora", interval=5)) != \
+        key(CachePolicy(kind="freqca", interval=5))   # warmup differs
+    # adaptive policies: value-keyed, never share with static schedules
+    a1 = CachePolicy(kind="freqca_a", tea_threshold=0.3)
+    a2 = CachePolicy(kind="freqca_a", tea_threshold=0.2)
+    assert key(a1) == key(a1) != key(a2)
+    assert key(a1) != key(CachePolicy(kind="freqca"))
+    assert key(CachePolicy(kind="teacache")) != key(a1)
+    # banks expose the key too: uniform -> the policy's, mixed ->
+    # collapsed when every lane is compatible
+    assert policies.bank(a1, 2).compatibility_key() == key(a1)
+    fam = policies.bank([CachePolicy(kind="fora", interval=1),
+                         CachePolicy(kind="none")], 2)
+    assert fam.compatibility_key() == key(CachePolicy(kind="none"))
+    mixed = policies.bank([a1, CachePolicy(kind="none")], 2)
+    assert mixed.compatibility_key() == (key(a1),
+                                         key(CachePolicy(kind="none")))
+
+
 # ---------------------------------------------------------------------------
 # golden equivalence vs the legacy string-`kind` sampler
 # ---------------------------------------------------------------------------

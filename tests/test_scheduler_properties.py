@@ -1,0 +1,294 @@
+"""Property-based serving-invariant harness for ``Scheduler.form_batch``.
+
+A model-based simulation drives arbitrary request streams — mixed
+policies (including compatible static-schedule families), deadlines,
+arrival gaps, interleaved cut attempts, and a final drain — through the
+scheduler in both formation modes, then checks the serving invariants
+on the full cut history:
+
+* **conservation** — no request is dropped or duplicated across cuts;
+* **stable FIFO within a compatibility group** — a request served
+  while not deadline-lapsed is never overtaken by a later submission of
+  its own group (ungrouped: of the whole queue), and every batch lists
+  its requests in submission order;
+* **deadline promotion** — whenever a batch is cut while lapsed
+  requests exist, the cut is taken from the group of the most-overdue
+  one and contains its lapsed members up to ``max_batch`` (ungrouped:
+  the FIFO-first lapsed requests), so a lapsed request is served by the
+  very next cut of its group and can never be starved;
+* **policy purity** — under ``group_policies=True`` every emitted
+  batch is policy-homogeneous (one compatibility key), and the plan's
+  ``group_key`` matches its members;
+* **bucketing** — ``bucket`` is a ladder signature that fits
+  ``n_real`` (exactly ``bucket_for`` unless ``pad_to_max``).
+
+The same checker runs under Hypothesis (the CI property job:
+``--hypothesis-profile=ci --hypothesis-seed=0``) and on deterministic
+regression streams that exercise each invariant without hypothesis
+installed (the bare tier-1 environment).
+"""
+import dataclasses
+
+import pytest
+
+from repro.core.cache import CachePolicy
+from repro.serving.scheduler import (DiffusionRequest, Scheduler,
+                                     bucket_for, bucket_sizes)
+
+# property tests skip gracefully when hypothesis is absent (CI installs
+# it via `pip install -e .[dev]`); the deterministic twins below drive
+# the same checker either way.  The derandomized "ci" profile and the
+# no-hypothesis shim live in hypothesis_compat.
+from hypothesis_compat import given, st  # noqa: E402
+
+
+DEFAULT = CachePolicy(kind="freqca", interval=5)
+# deliberately includes compatible static families: taylorseer(5) keys
+# with freqca(5) — same (interval, needed_history) — and fora(1) keys
+# with none (both activate every step)
+POLICIES = [
+    None,                                            # -> engine default
+    CachePolicy(kind="taylorseer", interval=5),      # same key as DEFAULT
+    CachePolicy(kind="fora", interval=2),
+    CachePolicy(kind="fora", interval=1),            # same key as "none"
+    CachePolicy(kind="none"),
+    CachePolicy(kind="freqca_a", tea_threshold=0.3, rho=0.25),
+    CachePolicy(kind="teacache", tea_threshold=0.2),
+]
+
+
+@dataclasses.dataclass
+class Cut:
+    plan: object
+    # request_ids lapsed anywhere in the queue at cut time, queue order
+    lapsed_before: list
+    queue_before: list          # request_ids queued at cut time
+
+
+def drive(actions, max_batch, max_wait_s, grouped, pad_to_max=False):
+    """Replay a generated action stream; return (submitted, cuts, sched).
+
+    ``actions``: sequence of ("submit", gap_s, policy_idx, deadline_s)
+    and ("cut", gap_s) tuples, on a fake monotonically advancing clock;
+    the stream always ends with a flush drain (every queue empties).
+    """
+    t = [0.0]
+    sched = Scheduler(max_batch=max_batch, max_wait_s=max_wait_s,
+                      pad_to_max=pad_to_max, clock=lambda: t[0],
+                      group_policies=grouped, default_policy=DEFAULT)
+    submitted, cuts, rid = [], [], 0
+
+    def attempt(flush):
+        lapsed = [sched.queue[i].request_id for i in sched._lapsed(t[0])]
+        queued = [r.request_id for r in sched.queue]
+        plan = sched.form_batch(flush=flush)
+        if plan is not None:
+            cuts.append(Cut(plan=plan, lapsed_before=lapsed,
+                            queue_before=queued))
+        return plan
+
+    for act in actions:
+        t[0] += act[1]
+        if act[0] == "submit":
+            req = DiffusionRequest(request_id=rid, seed=rid,
+                                   policy=POLICIES[act[2]],
+                                   deadline_s=act[3])
+            sched.submit(req)
+            submitted.append(req)
+            rid += 1
+        else:
+            attempt(flush=False)
+    guard = 0
+    while len(sched):
+        assert attempt(flush=True) is not None   # flush always cuts
+        guard += 1
+        assert guard <= len(submitted), "drain did not terminate"
+    return submitted, cuts, sched
+
+
+def check_invariants(submitted, cuts, sched, max_batch, grouped,
+                     pad_to_max=False):
+    by_id = {r.request_id: r for r in submitted}
+    key_of = {r.request_id: sched.group_key(r) for r in submitted}
+
+    # conservation: every submitted request served exactly once
+    served = [r.request_id for c in cuts for r in c.plan.requests]
+    assert sorted(served) == sorted(by_id), "dropped/duplicated requests"
+
+    fifo_tail: dict = {}   # group key -> last non-promoted rid served
+    for c in cuts:
+        ids = [r.request_id for r in c.plan.requests]
+        if grouped:
+            # canonical lane order: policy values in sorted blocks so
+            # the jit signature keys on the composition, stable
+            # submission order within each value
+            vals = [repr(r.policy if r.policy is not None else DEFAULT)
+                    for r in c.plan.requests]
+            assert vals == sorted(vals), "lane order not canonical"
+            last: dict = {}
+            for v, i in zip(vals, ids):
+                assert last.get(v, -1) < i, "FIFO broken within value"
+                last[v] = i
+        else:
+            # ungrouped batches list members in stable submission order
+            assert ids == sorted(ids)
+        # bucketing: a ladder signature that fits the real lanes
+        assert c.plan.bucket in bucket_sizes(max_batch)
+        want = (max_batch if pad_to_max
+                else bucket_for(len(ids), max_batch))
+        assert c.plan.bucket == want
+
+        if grouped:
+            # policy purity: one compatibility group per batch
+            keys = {key_of[i] for i in ids}
+            assert keys == {c.plan.group_key}, \
+                f"mixed-policy batch under grouping: {keys}"
+
+        # deadline promotion: a cut taken while lapsed requests exist
+        # comes from the most-overdue request's group and contains its
+        # lapsed members up to max_batch
+        if c.lapsed_before:
+            now = c.plan.formed_at
+            overdue = {i: now - by_id[i].submit_time - by_id[i].deadline_s
+                       for i in c.lapsed_before}
+            worst = max(overdue.values())
+            if grouped:
+                worst_keys = {key_of[i] for i, v in overdue.items()
+                              if v == worst}
+                assert c.plan.group_key in worst_keys
+                in_group = [i for i in c.lapsed_before
+                            if key_of[i] == c.plan.group_key]
+            else:
+                in_group = list(c.lapsed_before)
+            expect = in_group[:min(len(in_group), max_batch)]
+            assert set(expect) <= set(ids), \
+                f"lapsed {expect} missing from the next cut {ids}"
+
+        # stable FIFO within a group ACROSS cuts: a non-promoted request
+        # is never served in a later cut than a younger one of its own
+        # group (promoted = lapsed at its cut time; lanes inside one
+        # cut run simultaneously, so canonical lane order is exempt)
+        non_promoted = [i for i in ids if i not in c.lapsed_before]
+        for i in non_promoted:
+            k = key_of[i] if grouped else None
+            assert fifo_tail.get(k, -1) < i, \
+                f"request {i} overtook FIFO order in group {k}"
+        for i in non_promoted:
+            k = key_of[i] if grouped else None
+            fifo_tail[k] = max(fifo_tail.get(k, -1), i)
+
+
+def run_case(actions, max_batch, max_wait_s, grouped, pad_to_max=False):
+    submitted, cuts, sched = drive(actions, max_batch, max_wait_s,
+                                   grouped, pad_to_max)
+    check_invariants(submitted, cuts, sched, max_batch, grouped,
+                     pad_to_max)
+    return submitted, cuts
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property suite (the CI job)
+# ---------------------------------------------------------------------------
+
+def _actions():
+    gap = st.floats(min_value=0.0, max_value=0.3, allow_nan=False,
+                    allow_infinity=False)
+    deadline = st.one_of(st.none(),
+                         st.floats(min_value=0.0, max_value=0.5,
+                                   allow_nan=False, allow_infinity=False))
+    submit = st.tuples(st.just("submit"), gap,
+                       st.integers(0, len(POLICIES) - 1), deadline)
+    cut = st.tuples(st.just("cut"), gap)
+    return st.lists(st.one_of(submit, cut), min_size=1, max_size=48)
+
+
+@given(_actions(), st.integers(1, 8), st.sampled_from([0.0, 0.05, 1e9]),
+       st.booleans())
+def test_invariants_hold_for_arbitrary_streams(actions, max_batch,
+                                               max_wait_s, grouped):
+    """The full invariant set, grouped and ungrouped, any stream."""
+    run_case(actions, max_batch, max_wait_s, grouped)
+
+
+@given(_actions(), st.integers(1, 8))
+def test_invariants_hold_with_pad_to_max(actions, max_batch):
+    run_case(actions, max_batch, max_wait_s=0.01, grouped=True,
+             pad_to_max=True)
+
+
+@given(_actions(), st.integers(1, 4))
+def test_grouped_and_ungrouped_serve_identical_request_sets(actions,
+                                                            max_batch):
+    """Grouping changes batch composition, never the served set."""
+    sub_g, cuts_g = run_case(actions, max_batch, 0.05, grouped=True)
+    sub_u, cuts_u = run_case(actions, max_batch, 0.05, grouped=False)
+    assert sorted(r.request_id for c in cuts_g for r in c.plan.requests) \
+        == sorted(r.request_id for c in cuts_u for r in c.plan.requests)
+
+
+# ---------------------------------------------------------------------------
+# deterministic twins (run in the bare tier-1 env, no hypothesis)
+# ---------------------------------------------------------------------------
+
+def _mixed_stream_actions():
+    acts = []
+    for i in range(16):
+        acts.append(("submit", 0.01, i % len(POLICIES),
+                     0.2 if i % 5 == 4 else None))
+        if i % 3 == 2:
+            acts.append(("cut", 0.05))
+    acts.append(("cut", 1.0))
+    return acts
+
+
+@pytest.mark.parametrize("grouped", [False, True])
+@pytest.mark.parametrize("max_batch", [1, 3, 4])
+def test_deterministic_mixed_stream(grouped, max_batch):
+    run_case(_mixed_stream_actions(), max_batch, max_wait_s=0.05,
+             grouped=grouped)
+
+
+def test_deterministic_pad_to_max():
+    run_case(_mixed_stream_actions(), 4, max_wait_s=0.0, grouped=True,
+             pad_to_max=True)
+
+
+def test_deterministic_deadline_burst():
+    """Lapsed requests across *different* groups: each is promoted into
+    the very next cut of its group, most-overdue group first."""
+    acts = [("submit", 0.0, 1, None), ("submit", 0.0, 2, None),
+            ("submit", 0.0, 2, 0.10),       # fora(2): lapses second
+            ("submit", 0.0, 5, 0.05),       # freqca_a: most overdue
+            ("cut", 0.2)]
+    submitted, cuts = run_case(acts, 8, max_wait_s=1e9, grouped=True)
+    # first cut: the most-overdue lapsed request's (adaptive) group
+    assert [r.request_id for r in cuts[0].plan.requests] == [3]
+    # second: the other lapsed group, its lapsed member promoted
+    assert [r.request_id for r in cuts[1].plan.requests] == [1, 2]
+
+
+def test_deterministic_rare_group_not_starved():
+    """A busy group keeps its bucket full; the rare policy's request is
+    served as soon as it heads the queue and ages past max_wait."""
+    acts = [("submit", 0.0, 5, None)]                 # rare adaptive
+    acts += [("submit", 0.0, 2, None)] * 8            # busy fora group
+    acts += [("cut", 0.0)]                            # full-bucket cut
+    acts += [("submit", 0.0, 2, None)] * 4            # keeps arriving
+    acts += [("cut", 0.2)]                            # rare head aged
+    submitted, cuts = run_case(acts, 4, max_wait_s=0.1, grouped=True)
+    # cut 1 at t=0: fora bucket full, rare head still young -> fora
+    assert all(r.request_id != 0 for r in cuts[0].plan.requests)
+    # cut 2 at t=0.2: age pressure -> the rare request's own group
+    assert [r.request_id for r in cuts[1].plan.requests] == [0]
+
+
+def test_deterministic_static_families_share_batches():
+    """taylorseer(5)/freqca(5) and fora(1)/none key together: one batch
+    each, never one per distinct policy object."""
+    acts = [("submit", 0.0, 0, None), ("submit", 0.0, 1, None),
+            ("submit", 0.0, 3, None), ("submit", 0.0, 4, None),
+            ("cut", 0.2)]
+    submitted, cuts = run_case(acts, 8, max_wait_s=0.05, grouped=True)
+    assert len(cuts) == 2
+    assert [r.request_id for r in cuts[0].plan.requests] == [0, 1]
+    assert [r.request_id for r in cuts[1].plan.requests] == [2, 3]

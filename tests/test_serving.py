@@ -1,9 +1,13 @@
 """Continuous-batching serving tests: bucket selection, age/deadline
 batch formation (incl. the deadline-starvation promotion fix),
 padded-lane isolation, the editing noising path, the
-zero-steady-state-recompile guarantee (via the jit cache probe), and
-the threaded async submit path (futures resolve exactly once, ids
-conserved, lapsed deadlines served first)."""
+zero-steady-state-recompile guarantee (via the jit cache probe), the
+threaded async submit path (futures resolve exactly once, ids
+conserved, lapsed deadlines served first), and policy-homogeneous
+batch formation (compatibility grouping: pure cuts, one warmed ladder
+per group, bitwise-golden equivalence against the ungrouped mixed-lane
+path — sync and through the async engine under concurrent
+submitters)."""
 import threading
 
 import jax
@@ -172,6 +176,44 @@ def test_scheduler_pad_to_max_signature():
     assert plan.bucket == 8 and plan.n_real == 1
 
 
+def test_scheduler_policy_grouping_and_families():
+    """Grouped formation cuts policy-pure batches; compatible static
+    families share one group (taylorseer(5) with the freqca(5) default,
+    fora(interval=1) with none)."""
+    fre = CachePolicy(kind="freqca", interval=5)
+    sched = Scheduler(max_batch=4, max_wait_s=0.0, clock=lambda: 0.0,
+                      group_policies=True, default_policy=fre)
+    pols = [None, CachePolicy(kind="taylorseer", interval=5),
+            CachePolicy(kind="fora", interval=1),
+            CachePolicy(kind="none")]
+    for i, p in enumerate(pols):
+        sched.submit(DiffusionRequest(request_id=i, seed=i, policy=p),
+                     now=0.0)
+    assert len(sched.groups()) == 2
+    p1 = sched.form_batch(now=1.0)
+    p2 = sched.form_batch(now=1.0)
+    assert [r.request_id for r in p1.requests] == [0, 1]
+    assert [r.request_id for r in p2.requests] == [2, 3]
+    assert p1.group_key != p2.group_key
+    assert len(sched) == 0
+    # full-group trigger is per group: 3 groups of 2 fill no bucket of 4
+    sched2 = Scheduler(max_batch=4, max_wait_s=100.0, clock=lambda: 0.0,
+                       group_policies=True, default_policy=fre)
+    mixed = [fre, CachePolicy(kind="fora", interval=2),
+             CachePolicy(kind="freqca_a", tea_threshold=0.3, rho=0.25)]
+    for i in range(6):
+        sched2.submit(DiffusionRequest(request_id=i, seed=i,
+                                       policy=mixed[i % 3]), now=0.0)
+    assert not sched2.ready(now=0.0)
+    sched2.submit(DiffusionRequest(request_id=6, seed=6, policy=mixed[0]),
+                  now=0.0)
+    sched2.submit(DiffusionRequest(request_id=7, seed=7, policy=mixed[0]),
+                  now=0.0)
+    assert sched2.ready(now=0.0)          # the freqca group is full now
+    plan = sched2.form_batch(now=0.0)
+    assert [r.request_id for r in plan.requests] == [0, 3, 6, 7]
+
+
 # ---------------------------------------------------------------------------
 # engine
 # ---------------------------------------------------------------------------
@@ -301,11 +343,13 @@ def test_metrics_percentiles_and_summary():
 # ---------------------------------------------------------------------------
 
 def test_mixed_policy_batch_per_lane_accounting(dit_fns):
-    """The ISSUE-2 acceptance path: one lane freqca_a, one lane fora in
-    the same batch -> per-request n_full_steps differ, each lane's
-    latents match its solo-batch run, and the mixed signature serves
-    with zero steady-state recompiles once warm."""
-    eng = make_engine(dit_fns, max_batch=2, n_steps=12)
+    """The ISSUE-2 acceptance path (ungrouped mixed-lane former): one
+    lane freqca_a, one lane fora in the same batch -> per-request
+    n_full_steps differ, each lane's latents match its solo-batch run,
+    and the mixed signature serves with zero steady-state recompiles
+    once warm."""
+    eng = make_engine(dit_fns, max_batch=2, n_steps=12,
+                      group_policies=False)
     pol_a = CachePolicy(kind="freqca_a", tea_threshold=0.3, rho=0.25)
     pol_b = CachePolicy(kind="fora", interval=2)
     lanes = (pol_a, pol_b)
@@ -354,6 +398,132 @@ def test_uniform_nondefault_policy_collapses_signature(dit_fns):
         assert len(out) == 2
     # one new executable for the fora signature, reused on the repeat
     assert eng.metrics.compile_misses == misses + 1
+
+
+# ---------------------------------------------------------------------------
+# policy-homogeneous grouping (golden equivalence vs the ungrouped path)
+# ---------------------------------------------------------------------------
+
+MIXED_POLS = (None,                                  # engine default
+              CachePolicy(kind="fora", interval=2),
+              CachePolicy(kind="freqca_a", tea_threshold=0.3, rho=0.25))
+
+
+def _mixed_requests(n=6):
+    return [DiffusionRequest(request_id=i, seed=i,
+                             policy=MIXED_POLS[i % len(MIXED_POLS)])
+            for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def ungrouped_baseline(dit_fns):
+    """The PR-2 mixed-lane path: per-request results of the reference
+    stream served without grouping (mixed batches, per-lane masks)."""
+    eng = make_engine(dit_fns, max_batch=2, n_steps=8,
+                      group_policies=False)
+    for r in _mixed_requests():
+        eng.submit(r, now=0.0)
+    return {o.request_id: o for o in eng.serve_until_drained()}
+
+
+def test_grouped_golden_equivalence(dit_fns, ungrouped_baseline):
+    """Grouped serving of the same mixed-policy stream: policy-pure
+    cuts, compile-free after one warmed ladder per group, signatures
+    within the groups x buckets budget — and bitwise-identical
+    per-request outputs to the ungrouped path."""
+    eng = make_engine(dit_fns, max_batch=2, n_steps=8)
+    assert eng.group_policies and eng.scheduler.group_policies
+    eng.warmup(policies=[p for p in MIXED_POLS if p is not None])
+    warm_misses = eng.metrics.compile_misses
+    for r in _mixed_requests():
+        eng.submit(r, now=0.0)
+    outs = eng.serve_until_drained()
+    s = eng.metrics.summary()
+    # three policy-pure cuts of two lanes each
+    assert s["policy_groups"] == 3
+    assert all(g["batches"] == 1 and g["requests"] == 2
+               for g in s["per_group"].values())
+    # compile-free serving; the probe stays within the grouped budget
+    assert eng.metrics.compile_misses == warm_misses
+    assert s["compiled_signatures"] <= 3 * len(eng.buckets)
+    # bitwise golden vs the ungrouped mixed-lane path
+    assert sorted(o.request_id for o in outs) == \
+        sorted(ungrouped_baseline)
+    for o in outs:
+        base = ungrouped_baseline[o.request_id]
+        assert o.n_full_steps == base.n_full_steps
+        np.testing.assert_array_equal(np.asarray(o.latents),
+                                      np.asarray(base.latents))
+
+
+def test_grouped_async_concurrent_submitters_golden(dit_fns,
+                                                    ungrouped_baseline):
+    """The same stream through ``AsyncDiffusionEngine`` over a grouped
+    engine, submitted from concurrent client threads: every future
+    resolves to the bitwise result of the ungrouped sync path, with
+    zero steady-state recompiles."""
+    eng = make_engine(dit_fns, max_batch=2, n_steps=8, max_wait_s=0.005)
+    eng.warmup(policies=[p for p in MIXED_POLS if p is not None])
+    warm_misses = eng.metrics.compile_misses
+    reqs = _mixed_requests()
+    futures, lock = {}, threading.Lock()
+    with AsyncDiffusionEngine(eng) as aeng:
+        def client(k):
+            for i in range(k, len(reqs), 3):
+                fut = aeng.submit(reqs[i])
+                with lock:
+                    futures[i] = fut
+
+        threads = [threading.Thread(target=client, args=(k,))
+                   for k in range(3)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert aeng.drain(timeout=120)
+    assert eng.metrics.compile_misses == warm_misses
+    assert sorted(futures) == sorted(ungrouped_baseline)
+    for i, fut in futures.items():
+        res = fut.result(timeout=0)
+        base = ungrouped_baseline[i]
+        assert res.request_id == i
+        assert res.n_full_steps == base.n_full_steps
+        np.testing.assert_array_equal(np.asarray(res.latents),
+                                      np.asarray(base.latents))
+
+
+def test_family_batch_composition_signature(dit_fns):
+    """A static-family cut mixing distinct member policies (fora(1) +
+    none: identical activation masks) executes correctly and keys the
+    jit cache by CANONICAL composition — re-serving the same
+    composition under a different arrival interleaving adds zero
+    compiles, and each lane bitwise-matches its solo run."""
+    eng = make_engine(dit_fns, max_batch=2, n_steps=6)
+    fora1 = CachePolicy(kind="fora", interval=1)
+    none = CachePolicy(kind="none")
+    assert eng.scheduler.group_key(
+        DiffusionRequest(request_id=0, seed=0, policy=fora1)) == \
+        eng.scheduler.group_key(
+            DiffusionRequest(request_id=0, seed=0, policy=none))
+
+    def serve_pair(pol0, pol1):
+        eng.submit(DiffusionRequest(request_id=0, seed=0, policy=pol0))
+        eng.submit(DiffusionRequest(request_id=1, seed=1, policy=pol1))
+        out = eng.run_batch()      # one family batch: the group is full
+        assert len(out) == 2
+        return {o.request_id: o for o in out}
+
+    out1 = serve_pair(fora1, none)
+    misses = eng.metrics.compile_misses
+    serve_pair(none, fora1)        # reversed interleaving, same mix
+    assert eng.metrics.compile_misses == misses
+    # family lanes bitwise-match their solo (bucket-1, uniform) runs
+    for rid, pol in [(0, fora1), (1, none)]:
+        eng.submit(DiffusionRequest(request_id=rid, seed=rid, policy=pol))
+        solo = eng.run_batch()[0]
+        assert solo.n_full_steps == out1[rid].n_full_steps
+        np.testing.assert_array_equal(np.asarray(out1[rid].latents),
+                                      np.asarray(solo.latents))
 
 
 # ---------------------------------------------------------------------------
