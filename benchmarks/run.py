@@ -32,9 +32,9 @@ def main(argv=None) -> None:
         _enable_smoke()
 
     from benchmarks import (fig2_freq_analysis, fig4_crf_mse, figc1_ablation,
-                            kernel_bench, roofline, serve_throughput,
-                            table1_flux, table2_qwen, table3_kontext,
-                            table4_qwen_edit, table5_memory)
+                            kernel_bench, roofline, serve_quality,
+                            serve_throughput, table1_flux, table2_qwen,
+                            table3_kontext, table4_qwen_edit, table5_memory)
     csv = ["name,us_per_call,derived"]
 
     def headline(rows, pick="freqca(N=5)", metric="psnr"):
@@ -83,6 +83,11 @@ def main(argv=None) -> None:
         max_batch=4 if args.smoke else 8)
     csv.append("serve_async,0,rps_vs_single_thread=%s"
                % sva[-1]["rps_vs_single_thread"])
+    svq = serve_quality.run(
+        n_requests=12 if args.smoke else 24,
+        max_batch=4 if args.smoke else 8)
+    csv.append("serve_quality,0,shed_rps_ratio=%s"
+               % svq[-1]["rps_vs_no_shed"])
     try:
         rl = roofline.run()
         csv.append("roofline,0,combos=%d" % len(rl))

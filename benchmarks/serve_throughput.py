@@ -36,7 +36,8 @@ from __future__ import annotations
 import time
 
 from benchmarks import common as B
-from repro.core.cache import CachePolicy
+from repro.core.policies import (ForaPolicy, FreqCaAdaptivePolicy,
+                                 FreqCaPolicy)
 from repro.launch.serve import (mixed_stream, poisson_stream,
                                 serve_open_loop, serve_stream,
                                 serve_threaded_open_loop)
@@ -60,7 +61,7 @@ def run(out: str = "results/bench/BENCH_serve.json",
         title: str = "Serving throughput — bucketed vs pad-to-max"):
     cfg, params = B.get_model()
     full_fn, from_crf_fn = B.make_fns(cfg, params)
-    policy = CachePolicy(kind="freqca", interval=interval, method="dct")
+    policy = FreqCaPolicy(interval=interval, method="dct")
 
     def row(name, eng, outs, wall, warm, warm_misses):
         assert len(outs) == n_requests
@@ -130,11 +131,11 @@ def run_mixed(out: str = "results/bench/BENCH_serve_mixed.json",
 
     cfg, params = B.get_model()
     full_fn, from_crf_fn = B.make_fns(cfg, params)
-    default = CachePolicy(kind="freqca", interval=interval, method="dct")
+    default = FreqCaPolicy(interval=interval, method="dct")
     policies = [default,
-                CachePolicy(kind="fora", interval=max(interval // 2, 1)),
-                CachePolicy(kind="freqca_a", method="dct", rho=0.25,
-                            tea_threshold=0.3)]
+                ForaPolicy(interval=max(interval // 2, 1)),
+                FreqCaAdaptivePolicy(method="dct", rho=0.25,
+                                     tea_threshold=0.3)]
     n_groups = len({policy_registry.compatibility_key(p)
                     for p in policies})
     budget = n_groups * len(bucket_sizes(max_batch))
@@ -165,7 +166,7 @@ def run_mixed(out: str = "results/bench/BENCH_serve_mixed.json",
         for pol in policies:
             f = [o.n_full_steps for o in outs
                  if policies[o.request_id % len(policies)] == pol]
-            fulls[pol.kind] = round(sum(f) / max(len(f), 1), 2)
+            fulls[pol.name] = round(sum(f) / max(len(f), 1), 2)
         rows.append({
             "engine": name,
             "grouped": grouped,
@@ -227,7 +228,7 @@ def run_async(out: str = "results/bench/BENCH_serve_async.json",
     """
     cfg, params = B.get_model()
     full_fn, from_crf_fn = B.make_fns(cfg, params)
-    policy = CachePolicy(kind="freqca", interval=interval, method="dct")
+    policy = FreqCaPolicy(interval=interval, method="dct")
 
     # n_requests deliberately NOT a multiple of max_batch: under
     # overload the stream ends in a partial batch, which the sync

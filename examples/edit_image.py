@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 import repro.configs as config_lib
-from repro.core.cache import CachePolicy
+from repro.core import policies
 from repro.data import synthetic
 from repro.diffusion import sampler, schedule
 from repro.launch.train import train_dit
@@ -38,9 +38,9 @@ ts = schedule.timesteps(50) * tau           # resume from t = tau
 crf_shape = (2, (32 // cfg.patch_size) ** 2, cfg.d_model)
 
 full = sampler.sample(full_fn, from_crf_fn, x0, ts,
-                      CachePolicy(kind="none"), crf_shape=crf_shape)
+                      policies.NoCachePolicy(), crf_shape=crf_shape)
 fast = sampler.sample(full_fn, from_crf_fn, x0, ts,
-                      CachePolicy(kind="freqca", interval=5, method="fft"),
+                      policies.FreqCaPolicy(interval=5, method="fft"),
                       crf_shape=crf_shape)
 err = float(jnp.linalg.norm(fast.x - full.x) / jnp.linalg.norm(full.x))
 print(f"edit with freqca: {int(fast.n_full)}/50 full steps, "

@@ -3,8 +3,9 @@ FreqCa at 5x scheduled compute saving and compare with the uncached
 output.
 
 Cache policies are self-contained objects from the registry
-(``repro.core.policies``); the ``CachePolicy`` spec resolves to one, or
-a policy object can be passed to the sampler directly — both shown.
+(``repro.core.policies``) — construct them directly and pass them to
+the sampler.  (The legacy ``CachePolicy(kind=...)`` spec still resolves
+but is deprecated.)
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,7 +14,6 @@ import jax.numpy as jnp
 
 import repro.configs as config_lib
 from repro.core import policies
-from repro.core.cache import CachePolicy
 from repro.diffusion import sampler, schedule
 from repro.launch.train import train_dit
 from repro.models import dit
@@ -40,11 +40,8 @@ ts = schedule.timesteps(50)
 crf_shape = (4, (32 // cfg.patch_size) ** 2, cfg.d_model)
 
 full = sampler.sample(full_fn, from_crf_fn, x0, ts,
-                      CachePolicy(kind="none"), crf_shape=crf_shape)
-# a CachePolicy spec resolves to the registered object; building the
-# policy object directly is equivalent:
+                      policies.NoCachePolicy(), crf_shape=crf_shape)
 pol = policies.FreqCaPolicy(interval=5, method="dct", rho=0.0625)
-assert CachePolicy(kind="freqca", interval=5).resolve() == pol
 freqca = sampler.sample(full_fn, from_crf_fn, x0, ts, pol,
                         crf_shape=crf_shape)
 err = float(jnp.linalg.norm(freqca.x - full.x) / jnp.linalg.norm(full.x))

@@ -85,9 +85,26 @@ class CachePolicy:
         return self.k_low + self.k_high   # freqca / freqca_a
 
     def resolve(self):
-        """Registered policy object for this spec (repro.core.policies)."""
+        """Registered policy object for this spec (repro.core.policies).
+
+        .. deprecated:: construct the policy object directly
+           (``FreqCaPolicy(interval=5)``); the string-kind spec route
+           is kept only as a shim and warns once per process.
+        """
+        global _RESOLVE_WARNED
+        if not _RESOLVE_WARNED:
+            _RESOLVE_WARNED = True
+            import warnings
+            warnings.warn(
+                "CachePolicy.resolve() is deprecated; construct policy "
+                "objects from repro.core.policies directly "
+                "(e.g. FreqCaPolicy(interval=5))",
+                DeprecationWarning, stacklevel=2)
         from repro.core.policies import registry
         return registry.resolve(self)
+
+
+_RESOLVE_WARNED = False
 
 
 class CacheState(NamedTuple):

@@ -3,16 +3,21 @@
 Policies implement the four-method protocol in :mod:`.base` and register
 a ``spec -> Policy`` factory in :mod:`.registry`; the diffusion sampler
 drives them through a per-lane :class:`~.registry.PolicyBank` and never
-dispatches on policy names.  ``repro.core.cache.CachePolicy`` remains
-the user-facing spec; ``.resolve()`` turns it into the registered
-object.
+dispatches on policy names.  Policy objects are the public construction
+route — build them directly (``FreqCaPolicy(interval=5)``).  The legacy
+``repro.core.cache.CachePolicy`` string-kind spec is deprecated:
+``.resolve()`` still works (one DeprecationWarning) and ``resolve``
+here still accepts specs for the shim's sake.
 """
-from repro.core.policies.base import (Policy, Ring, StepContext,  # noqa: F401
-                                      lane_select)
+from repro.core.policies.base import (ErrorFeedback, Policy,  # noqa: F401
+                                      Ring, StepContext, lane_select)
 from repro.core.policies.foca import FoCaPolicy  # noqa: F401
 from repro.core.policies.fora import ForaPolicy  # noqa: F401
 from repro.core.policies.freqca import FreqCaPolicy  # noqa: F401
 from repro.core.policies.freqca_a import FreqCaAdaptivePolicy  # noqa: F401
+from repro.core.policies.freqca_eb import (ERROR_TIERS,  # noqa: F401
+                                           FreqCaErrorBudgetPolicy,
+                                           budget_tier)
 from repro.core.policies.none import NoCachePolicy  # noqa: F401
 from repro.core.policies.registry import (PolicyBank, available,  # noqa: F401
                                           bank, compatibility_key, register,

@@ -27,10 +27,23 @@ signature.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, ClassVar, NamedTuple, Tuple
+from typing import Any, ClassVar, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+
+class ErrorFeedback(NamedTuple):
+    """Per-lane realized-error report extracted from a policy state.
+
+    ``realized`` is the largest accumulated prediction error a lane
+    committed between two consecutive full forwards (the quantity the
+    per-request ``max_error`` SLO bounds); ``events`` counts the full
+    forwards that were *triggered by the budget* (warm-up fills are
+    excluded).  Policies without error feedback report none.
+    """
+    realized: jnp.ndarray          # [B] f32 — peak inter-full error
+    events: jnp.ndarray            # [B] int32 — budget-triggered fulls
 
 
 class StepContext(NamedTuple):
@@ -196,6 +209,11 @@ class Policy:
     # True when decide() can return lane-varying masks (adaptive
     # policies); False lets the sampler keep the scalar lax.cond path.
     per_lane: ClassVar[bool] = False
+    # True when the policy consumes realized-error observations: the
+    # sampler then measures the prediction error on every full step and
+    # feeds it back through ``observe``.  Static, so policies that don't
+    # opt in trace exactly as before (bit-identical programs).
+    uses_error_feedback: ClassVar[bool] = False
 
     # --- protocol --------------------------------------------------------
     def init(self, batch: int, feat_shape: Tuple[int, ...],
@@ -217,6 +235,43 @@ class Policy:
     def predict(self, state, ctx: StepContext) -> jnp.ndarray:
         """Reconstruct ẑ_t from the cache (cached lanes)."""
         raise NotImplementedError
+
+    # --- error feedback (optional) ---------------------------------------
+    def measure_error(self, state, crf: jnp.ndarray,
+                      ctx: StepContext) -> jnp.ndarray:
+        """Realized prediction error against the fresh CRF, per lane.
+
+        Called by the sampler on full steps *before* ``update`` pushes
+        the fresh feature (only when ``uses_error_feedback``), so the
+        state still holds the cache the lane would have served.  The
+        default scores the whole-feature relative L2 of ``predict``;
+        policies may return any per-lane measurement their ``observe``
+        understands (freqca_eb returns per-band errors).
+        """
+        return lane_rel_norm(self.predict(state, ctx), crf)
+
+    def observe(self, state, realized_error: jnp.ndarray,
+                ctx: StepContext):
+        """Ingest a realized-error measurement (no-op by default).
+
+        Runs on full steps, after ``update``; the sampler merges the
+        result back only into the activated lanes.
+        """
+        return state
+
+    def error_feedback(self, state) -> Optional[ErrorFeedback]:
+        """Extract the realized-error report from a final state, or
+        ``None`` for policies that track no feedback."""
+        return None
+
+    def with_budget(self, max_error: Optional[float]) -> "Policy":
+        """Specialize this policy to a per-request error budget.
+
+        ``None`` (no SLO) and policies without error feedback return
+        ``self`` unchanged, keeping request grouping and compiled
+        signatures exactly as before.
+        """
+        return self
 
     # --- metadata --------------------------------------------------------
     def compatibility_key(self) -> Tuple:

@@ -42,8 +42,9 @@ def register(name: str):
 
 def _ensure_builtin() -> None:
     # import for registration side effects; lazy to avoid import cycles
-    from repro.core.policies import (foca, fora, freqca, freqca_a,  # noqa: F401
-                                     none, taylorseer, teacache)
+    from repro.core.policies import (foca, fora, freqca,  # noqa: F401
+                                     freqca_a, freqca_eb, none, taylorseer,
+                                     teacache)
 
 
 def available() -> Tuple[str, ...]:
@@ -82,6 +83,10 @@ class PolicyBank:
     """Per-lane policy assignment for one sampler batch (abstract)."""
     scalar_decision: bool
     always_full: bool
+    # any lane consumes realized-error observations (static: the
+    # sampler only adds the measure/observe ops when True, so banks
+    # without feedback trace bit-identically to before)
+    uses_error_feedback: bool = False
     batch: int
 
     def compatibility_key(self):
@@ -102,6 +107,21 @@ class PolicyBank:
     def predict(self, state, ctx: base.StepContext):
         raise NotImplementedError
 
+    # --- error feedback ---------------------------------------------------
+    def measure_error(self, state, crf, ctx: base.StepContext):
+        """Per-lane realized-error measurement (pre-update state)."""
+        raise NotImplementedError
+
+    def observe(self, state, err, ctx: base.StepContext, mask):
+        """Feed measurements back, merged into the masked lanes only
+        (a lane alone would not have measured on a step it skipped)."""
+        raise NotImplementedError
+
+    def error_feedback(self, state):
+        """[B]-shaped :class:`~repro.core.policies.base.ErrorFeedback`
+        extracted from the final state, or ``None``."""
+        return None
+
 
 class UniformBank(PolicyBank):
     """Every lane runs the same policy; state is batched in one pytree."""
@@ -111,6 +131,7 @@ class UniformBank(PolicyBank):
         self.batch = batch
         self.scalar_decision = not policy.per_lane
         self.always_full = policy.name == "none"
+        self.uses_error_feedback = policy.uses_error_feedback
 
     def compatibility_key(self):
         return self.policy.compatibility_key()
@@ -134,6 +155,16 @@ class UniformBank(PolicyBank):
     def predict(self, state, ctx):
         return self.policy.predict(state, ctx)
 
+    def measure_error(self, state, crf, ctx):
+        return self.policy.measure_error(state, crf, ctx)
+
+    def observe(self, state, err, ctx, mask):
+        new = self.policy.observe(state, err, ctx)
+        return base.lane_select(mask, new, state)
+
+    def error_feedback(self, state):
+        return self.policy.error_feedback(state)
+
 
 class MixedBank(PolicyBank):
     """One policy per lane; state is a static tuple of lane-1 pytrees."""
@@ -143,6 +174,8 @@ class MixedBank(PolicyBank):
         self.batch = len(self.policies)
         self.scalar_decision = False
         self.always_full = all(p.name == "none" for p in self.policies)
+        self.uses_error_feedback = any(p.uses_error_feedback
+                                       for p in self.policies)
 
     def compatibility_key(self):
         keys = tuple(p.compatibility_key() for p in self.policies)
@@ -173,6 +206,40 @@ class MixedBank(PolicyBank):
         return jnp.concatenate([
             pol.predict(state[j], ctx.lane(j))
             for j, pol in enumerate(self.policies)])
+
+    def measure_error(self, state, crf, ctx):
+        # per-lane tuple: error shapes may differ across policies
+        # (freqca_eb reports per-band pairs); None for lanes that
+        # consume no feedback
+        return tuple(
+            pol.measure_error(state[j], crf[j:j + 1], ctx.lane(j))
+            if pol.uses_error_feedback else None
+            for j, pol in enumerate(self.policies))
+
+    def observe(self, state, err, ctx, mask):
+        out = []
+        for j, pol in enumerate(self.policies):
+            if pol.uses_error_feedback:
+                new = pol.observe(state[j], err[j], ctx.lane(j))
+                out.append(base.lane_select(mask[j:j + 1], new, state[j]))
+            else:
+                out.append(state[j])
+        return tuple(out)
+
+    def error_feedback(self, state):
+        if not self.uses_error_feedback:
+            return None
+        parts = []
+        for j, pol in enumerate(self.policies):
+            fb = pol.error_feedback(state[j])
+            if fb is None:
+                fb = base.ErrorFeedback(
+                    realized=jnp.zeros((1,), jnp.float32),
+                    events=jnp.zeros((1,), jnp.int32))
+            parts.append(fb)
+        return base.ErrorFeedback(
+            realized=jnp.concatenate([p.realized for p in parts]),
+            events=jnp.concatenate([p.events for p in parts]))
 
 
 PolicyLike = Union[base.Policy, object]

@@ -40,6 +40,9 @@ class SampleResult(NamedTuple):
     n_full: jnp.ndarray             # [] — batch forwards (compute) count
     n_full_lanes: Optional[jnp.ndarray] = None   # [B] activated steps/lane
     trajectory: Optional[jnp.ndarray] = None
+    # [B]-shaped realized-error report when any lane's policy consumes
+    # error feedback (freqca_eb), else None
+    feedback: Optional[policy_base.ErrorFeedback] = None
 
 
 def sample(full_fn: Callable, from_crf_fn: Callable, x_init: jnp.ndarray,
@@ -72,7 +75,17 @@ def sample(full_fn: Callable, from_crf_fn: Callable, x_init: jnp.ndarray,
         def full_branch(op):
             x_, state_ = op
             v_full, crf = full_fn(x_, t_now)
-            state_ = bank.apply_update(state_, crf, ctx, mask)
+            if bank.uses_error_feedback:
+                # score the prediction the cache WOULD have served for
+                # this step (pre-update state) against the fresh CRF,
+                # then feed it back after the push — the feedback loop
+                # only costs ops for policies that opted in (static
+                # flag), so everything else traces bit-identically
+                err = bank.measure_error(state_, crf, ctx)
+                state_ = bank.apply_update(state_, crf, ctx, mask)
+                state_ = bank.observe(state_, err, ctx, mask)
+            else:
+                state_ = bank.apply_update(state_, crf, ctx, mask)
             if bank.scalar_decision:
                 return v_full, state_
             # lanes that did not activate keep their own schedule: they
@@ -100,11 +113,14 @@ def sample(full_fn: Callable, from_crf_fn: Callable, x_init: jnp.ndarray,
         return (x_new, state), out
 
     idx = jnp.arange(n_steps)
-    (x, _), (traj, fwd, used) = jax.lax.scan(step, (x_init, state0),
-                                             (idx, ts[:-1], ts[1:]))
+    (x, state), (traj, fwd, used) = jax.lax.scan(step, (x_init, state0),
+                                                 (idx, ts[:-1], ts[1:]))
+    feedback = (bank.error_feedback(state)
+                if bank.uses_error_feedback else None)
     return SampleResult(x=x, n_full=jnp.sum(fwd),
                         n_full_lanes=jnp.sum(used, axis=0),
-                        trajectory=traj if return_trajectory else None)
+                        trajectory=traj if return_trajectory else None,
+                        feedback=feedback)
 
 
 def reference_features(full_fn: Callable, x_init: jnp.ndarray,

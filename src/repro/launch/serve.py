@@ -49,7 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs as config_lib
-from repro.core.cache import CachePolicy
+from repro.core import policies as policy_lib
 from repro.data import synthetic
 from repro.launch.train import train_dit
 from repro.models import dit
@@ -66,18 +66,20 @@ def psnr(a, b, data_range=2.0):
 
 
 def _make_request(rid: int, size: int, channels: int, edit_every: int,
-                  policies=None) -> DiffusionRequest:
+                  policies=None, max_error=None) -> DiffusionRequest:
     pol = policies[rid % len(policies)] if policies else None
     if edit_every and rid % edit_every == edit_every - 1:
         ref = synthetic.shapes_batch(jax.random.key(1000 + rid), 1,
                                      size=size, channels=channels)[0]
         return DiffusionRequest(request_id=rid, seed=rid, init_latents=ref,
-                                edit_strength=0.5, policy=pol)
-    return DiffusionRequest(request_id=rid, seed=rid, policy=pol)
+                                edit_strength=0.5, policy=pol,
+                                max_error=max_error)
+    return DiffusionRequest(request_id=rid, seed=rid, policy=pol,
+                            max_error=max_error)
 
 
 def mixed_stream(n_requests: int, size: int, channels: int,
-                 edit_every: int = 5, policies=None):
+                 edit_every: int = 5, policies=None, max_error=None):
     """Deterministic mixed request stream: bursts of varying size, every
     ``edit_every``-th request an editing request from a synthetic ref;
     optional per-request cache policies assigned round-robin."""
@@ -87,25 +89,30 @@ def mixed_stream(n_requests: int, size: int, channels: int,
         burst = []
         for _ in range(min(next(burst_sizes), n_requests - rid)):
             burst.append(_make_request(rid, size, channels, edit_every,
-                                       policies))
+                                       policies, max_error=max_error))
             rid += 1
         reqs.append(burst)
     return reqs
 
 
 def poisson_stream(n_requests: int, rate: float, size: int, channels: int,
-                   edit_every: int = 5, policies=None, seed: int = 0):
-    """Open-loop arrival plan: ``[(arrival_s, request), ...]`` with
-    exponential inter-arrival times at ``rate`` req/s (deterministic for
-    a given ``seed``)."""
+                   edit_every: int = 5, policies=None, seed: int = 0,
+                   max_error=None):
+    """Open-loop arrival plan: a flat list of ``DiffusionRequest`` with
+    exponential inter-arrival times at ``rate`` req/s stamped into each
+    request's ``arrival_s`` (deterministic for a given ``seed``) — the
+    unified request object carries its own arrival, no side-channel
+    tuples."""
     if rate <= 0:
         raise ValueError(f"rate must be > 0, got {rate}")
     rng = np.random.RandomState(seed)
     t, plan = 0.0, []
     for rid in range(n_requests):
         t += float(rng.exponential(1.0 / rate))
-        plan.append((t, _make_request(rid, size, channels, edit_every,
-                                      policies)))
+        req = _make_request(rid, size, channels, edit_every, policies,
+                            max_error=max_error)
+        req.arrival_s = t
+        plan.append(req)
     return plan
 
 
@@ -158,8 +165,8 @@ def serve_open_loop(eng: DiffusionEngine, plan, poll_s: float = 0.002):
     t0 = time.perf_counter()
     while i < len(plan) or eng.scheduler.depth:
         now = time.perf_counter() - t0
-        while i < len(plan) and plan[i][0] <= now:
-            eng.submit(plan[i][1], now=plan[i][0])
+        while i < len(plan) and plan[i].arrival_s <= now:
+            eng.submit(plan[i], now=plan[i].arrival_s)
             i += 1
         served = eng.run_batch(flush=False, now=now)
         outs.extend(served)
@@ -187,8 +194,8 @@ def serve_threaded_open_loop(eng: DiffusionEngine, plan, clients: int = 4):
 
         def client(k: int):
             for i in range(k, len(plan), clients):
-                arrival, req = plan[i]
-                delay = arrival - (time.perf_counter() - t0)
+                req = plan[i]
+                delay = req.arrival_s - (time.perf_counter() - t0)
                 if delay > 0:
                     time.sleep(delay)
                 futures[i] = aeng.submit(req)
@@ -236,6 +243,15 @@ def main():
                     help="disable policy-homogeneous batch formation "
                          "(mixed-lane batches, one jit signature per "
                          "lane-policy mix — the pre-grouping baseline)")
+    ap.add_argument("--max-error", type=float, default=None,
+                    help="per-request quality SLO: serve through the "
+                         "error-budgeted freqca_eb policy, bounding the "
+                         "cache error accumulated between full forwards")
+    ap.add_argument("--shed-depth", type=int, default=None,
+                    help="queue depth at which incoming requests' error "
+                         "budgets are relaxed by --shed-factor (load "
+                         "shedding: quality, never requests)")
+    ap.add_argument("--shed-factor", type=float, default=4.0)
     args = ap.parse_args()
 
     if args.requests < 1:
@@ -261,18 +277,27 @@ def main():
                                (n_tokens, cfg.d_model), policy,
                                n_steps=args.steps, max_batch=args.batch,
                                max_wait_s=args.max_wait,
-                               group_policies=not args.ungrouped)
+                               group_policies=not args.ungrouped,
+                               shed_depth=args.shed_depth,
+                               shed_factor=args.shed_factor)
 
-    default_pol = CachePolicy(kind="freqca", interval=args.interval,
-                              method=args.method)
+    if args.max_error is not None:
+        # quality-SLO serving: the error-budgeted policy spends each
+        # request's max_error between full forwards
+        default_pol = policy_lib.FreqCaErrorBudgetPolicy(
+            method=args.method, rho=0.25).with_budget(args.max_error)
+    else:
+        default_pol = policy_lib.FreqCaPolicy(interval=args.interval,
+                                              method=args.method)
     policies = None
     if args.mixed_policies:
         policies = [default_pol,
-                    CachePolicy(kind="fora", interval=args.interval),
-                    CachePolicy(kind="freqca_a", method=args.method,
-                                rho=0.25, tea_threshold=0.3)]
+                    policy_lib.ForaPolicy(interval=args.interval),
+                    policy_lib.FreqCaAdaptivePolicy(method=args.method,
+                                                    rho=0.25,
+                                                    tea_threshold=0.3)]
     eng_freqca = engine(default_pol)
-    eng_full = engine(CachePolicy(kind="none"))
+    eng_full = engine(policy_lib.NoCachePolicy())
 
     results = {}
     for name, eng in [("freqca", eng_freqca), ("full", eng_full)]:
@@ -285,18 +310,24 @@ def main():
         # is its own mix — warm them all via cyclic_signatures.
         sets = cyclic_signatures(pols, args.batch) \
             if pols and args.ungrouped else ()
-        warm = eng.warmup(lane_policy_sets=sets,
-                          policies=pols if pols and not args.ungrouped
-                          else ())
+        extra = list(pols) if pols and not args.ungrouped else []
+        if args.max_error is not None and args.shed_depth is not None:
+            # shedding mints the relaxed-tier signature: warm it too so
+            # overload serving stays compile-free
+            extra.append(default_pol.with_budget(
+                args.max_error * args.shed_factor))
+        warm = eng.warmup(lane_policy_sets=sets, policies=extra)
         n_exec = eng.compiled_buckets()
         print(f"[{name:7s}] warmup: {n_exec} executables "
               f"({len(eng.buckets)} buckets x "
               f"{'policy groups' if not args.ungrouped else 'policy mixes'}"
               f") in {warm:.1f}s")
+        max_err = args.max_error if name == "freqca" else None
         if args.arrival == "poisson":
             plan = poisson_stream(args.requests, args.rate, size,
                                   cfg.in_channels,
-                                  edit_every=args.edit_every, policies=pols)
+                                  edit_every=args.edit_every, policies=pols,
+                                  max_error=max_err)
             if args.clients > 0:
                 outs, wall = serve_threaded_open_loop(eng, plan,
                                                       clients=args.clients)
@@ -304,7 +335,8 @@ def main():
                 outs, wall = serve_open_loop(eng, plan)
         else:
             bursts = mixed_stream(args.requests, size, cfg.in_channels,
-                                  edit_every=args.edit_every, policies=pols)
+                                  edit_every=args.edit_every, policies=pols,
+                                  max_error=max_err)
             outs, wall = serve_stream(eng, bursts)
         outs.sort(key=lambda o: o.request_id)
         results[name] = (outs, wall)
@@ -324,11 +356,20 @@ def main():
               f"(steady-state hits {s['compile_hits']}, "
               f"signatures {s['compiled_signatures']})"
               + (f"  ttfr {ttfr:.3f}s" if ttfr is not None else ""))
+        if args.max_error is not None and name == "freqca":
+            print(f"[{name:7s}] quality SLO: realized error p50/p95 "
+                  f"{s['realized_error_p50']:.4f}/"
+                  f"{s['realized_error_p95']:.4f} "
+                  f"(budget {args.max_error}), "
+                  f"budget events {s['budget_events']}, "
+                  f"shed events {s['shed_events']}")
         if s["policy_groups"]:
             for key, g in s["per_group"].items():
                 print(f"          group {key}: {g['requests']} reqs in "
                       f"{g['batches']} batches, occupancy "
-                      f"{g['mean_occupancy']:.2f}")
+                      f"{g['mean_occupancy']:.2f}"
+                      + (f", budget events {g['budget_events']}"
+                         if g["budget_events"] else ""))
 
     f_outs, f_wall = results["freqca"]
     u_outs, u_wall = results["full"]

@@ -6,6 +6,12 @@
   returns a ``concurrent.futures.Future`` immediately — it resolves to
   the request's ``DiffusionResult`` when its batch completes (or raises
   the batch's exception / ``CancelledError`` on a no-drain shutdown).
+  It takes the same ``DiffusionRequest`` object as the sync
+  ``DiffusionEngine.submit`` / ``run_batch(reqs=...)`` path — one
+  request type across both APIs — so per-request quality SLOs
+  (``max_error``) and load-shedding behave identically: budget
+  stamping and shedding happen inside ``Scheduler.submit``, which both
+  routes share.
 * one background worker thread owns the whole batch-formation →
   ``execute_plan`` loop.  It blocks on the scheduler's condition
   variable and wakes on submits or exactly when age/deadline pressure

@@ -41,7 +41,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.cache import CachePolicy
 from repro.diffusion import sampler as sampler_lib
 from repro.diffusion import schedule
 from repro.models import blocks, transformer
@@ -60,17 +59,24 @@ class DiffusionResult(NamedTuple):
     wall_time_s: float
     queue_wait_s: float = 0.0
     bucket: int = 0
+    # quality SLO report (error-feedback policies only): peak cache
+    # error accumulated between full forwards, and how many fulls the
+    # budget triggered for this request's lane
+    realized_error: Optional[float] = None
+    budget_events: Optional[int] = None
 
 
 class DiffusionEngine:
     """Continuous-batching FreqCa-cached rectified-flow sampler."""
 
     def __init__(self, full_fn: Callable, from_crf_fn: Callable,
-                 latent_shape, crf_shape, policy: CachePolicy,
+                 latent_shape, crf_shape, policy,
                  n_steps: int = 50, max_batch: int = 8,
                  crf_dtype=jnp.float32, max_wait_s: float = 0.0,
                  pad_to_max: bool = False, mesh=None,
-                 group_policies: bool = True):
+                 group_policies: bool = True,
+                 shed_depth: Optional[int] = None,
+                 shed_factor: float = 4.0):
         self.full_fn = full_fn
         self.from_crf_fn = from_crf_fn
         self.latent_shape = tuple(latent_shape)      # [H, W, C]
@@ -85,7 +91,9 @@ class DiffusionEngine:
                                    max_wait_s=max_wait_s,
                                    pad_to_max=pad_to_max,
                                    group_policies=group_policies,
-                                   default_policy=policy)
+                                   default_policy=policy,
+                                   shed_depth=shed_depth,
+                                   shed_factor=shed_factor)
         self.metrics = ServeMetrics()
         self._ts = schedule.timesteps(n_steps)
 
@@ -98,7 +106,10 @@ class DiffusionEngine:
                 self.full_fn, self.from_crf_fn, x_init, self._ts,
                 lane_policies, crf_shape=(batch,) + self.crf_shape,
                 crf_dtype=self.crf_dtype)
-            return res.x, res.n_full, res.n_full_lanes
+            # feedback is None (an empty pytree) unless some lane's
+            # policy consumes error observations, so non-SLO signatures
+            # stay byte-identical programs
+            return res.x, res.n_full, res.n_full_lanes, res.feedback
 
         self._jit_run = jax.jit(run, static_argnums=1, donate_argnums=0)
 
@@ -179,7 +190,7 @@ class DiffusionEngine:
         for b, sig in sigs:
             x = self._place(jnp.zeros((b,) + self.latent_shape))
             cache_before = self.compiled_buckets()
-            out, _, _ = self._jit_run(x, sig)
+            out = self._jit_run(x, sig)[0]
             out.block_until_ready()
             self.metrics.observe_compile(
                 hit=self.compiled_buckets() == cache_before)
@@ -225,34 +236,54 @@ class DiffusionEngine:
         sig = self._normalize_signature(plan.lane_policies(self.policy))
         cache_before = self.compiled_buckets()
         t0 = time.perf_counter()
-        x, n_forwards, lane_full = self._jit_run(x_init, sig)
+        x, n_forwards, lane_full, feedback = self._jit_run(x_init, sig)
         x.block_until_ready()
         wall = time.perf_counter() - t0
+        lane_err = lane_ev = None
+        if feedback is not None:
+            lane_err = [float(v) for v in feedback.realized[:plan.n_real]]
+            lane_ev = [int(v) for v in feedback.events[:plan.n_real]]
         self.metrics.observe_compile(
             hit=self.compiled_buckets() == cache_before)
         self.metrics.observe_compiled_signatures(self.compiled_buckets())
         self.metrics.observe_batch(
             plan.bucket, plan.n_real, wall, int(n_forwards), self.n_steps,
             lane_full=[int(v) for v in lane_full[:plan.n_real]],
-            group_key=plan.group_key)
+            group_key=plan.group_key,
+            lane_errors=lane_err, lane_events=lane_ev)
+        self.metrics.observe_shed_events(self.scheduler.shed_events)
         out = []
         for i, r in enumerate(plan.requests):   # padded lanes never leak
+            err = lane_err[i] if lane_err is not None else None
+            ev = lane_ev[i] if lane_ev is not None else None
             wait = max(0.0, plan.formed_at - r.submit_time)
             self.metrics.observe_request(wait, wait + wall,
-                                         n_full=int(lane_full[i]))
+                                         n_full=int(lane_full[i]),
+                                         realized_error=err,
+                                         budget_events=ev)
             out.append(DiffusionResult(r.request_id, x[i],
                                        int(lane_full[i]), wall, wait,
-                                       plan.bucket))
+                                       plan.bucket,
+                                       realized_error=err,
+                                       budget_events=ev))
         return out
 
     # backwards-compatible alias (pre-async name)
     _execute = execute_plan
 
-    def run_batch(self, flush: bool = True,
+    def run_batch(self, reqs: Optional[Sequence[DiffusionRequest]] = None,
+                  flush: bool = True,
                   now: Optional[float] = None) -> List[DiffusionResult]:
         """Cut and serve one batch.  ``flush=True`` (default) drains the
         queue immediately; ``flush=False`` respects age/deadline-based
-        batch formation and returns [] while the scheduler holds back."""
+        batch formation and returns [] while the scheduler holds back.
+
+        ``reqs`` — optional :class:`DiffusionRequest` objects to submit
+        first: the one-shot sync entry point, taking exactly the request
+        type (and field semantics) the async engine's ``submit`` does.
+        """
+        for r in (reqs or ()):
+            self.submit(r, now=now)
         self.metrics.observe_queue_depth(self.scheduler.depth)
         plan = self.scheduler.form_batch(now=now, flush=flush)
         if plan is None:

@@ -57,6 +57,15 @@ class ServeMetrics:
     request_waits: List[float] = dataclasses.field(default_factory=list)
     request_latencies: List[float] = dataclasses.field(default_factory=list)
     request_full_steps: List[int] = dataclasses.field(default_factory=list)
+    # quality SLO: per-request realized error (peak accumulated cache
+    # error between full forwards, reported by error-feedback policies)
+    # and the total count of budget-triggered full forwards
+    request_realized_errors: List[float] = dataclasses.field(
+        default_factory=list)
+    budget_events_total: int = 0
+    # latest scheduler shed counter (budgets relaxed under queue
+    # pressure; requests are never dropped)
+    shed_events: int = 0
     # queue depth samples (taken whenever the engine polls the queue)
     queue_depths: List[int] = dataclasses.field(default_factory=list)
     # async serving: seconds from serving start to the first resolved
@@ -67,7 +76,8 @@ class ServeMetrics:
     cache_state_bytes_per_lane: Optional[int] = None
     # latest jit-cache probe (None until pushed; -1 = probe unavailable)
     compiled_signatures: Optional[int] = None
-    # per compatibility group: [n_batches, n_requests, occupancy_sum]
+    # per compatibility group:
+    # [n_batches, n_requests, occupancy_sum, budget_events, errors]
     group_batches: Dict = dataclasses.field(default_factory=dict)
     _lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False)
@@ -101,21 +111,34 @@ class ServeMetrics:
         with self._lock:
             self.compiled_signatures = int(n)
 
+    def observe_shed_events(self, n: int) -> None:
+        """Record the scheduler's cumulative shed counter (latest wins)."""
+        with self._lock:
+            self.shed_events = int(n)
+
     def observe_batch(self, bucket: int, n_real: int, wall_s: float,
                       n_forwards: int, n_steps: int,
                       lane_full: Optional[List[int]] = None,
-                      group_key=None) -> None:
+                      group_key=None,
+                      lane_errors: Optional[List[float]] = None,
+                      lane_events: Optional[List[int]] = None) -> None:
         """``n_forwards`` — batch forwards actually run (compute);
         ``lane_full`` — per-real-lane activated-step counts (quality);
         ``group_key`` — the compatibility group this batch was cut from
-        (None under the ungrouped former)."""
+        (None under the ungrouped former); ``lane_errors`` /
+        ``lane_events`` — per-real-lane realized error and
+        budget-triggered full counts from error-feedback policies."""
         with self._lock:
             if group_key is not None:
                 g = self.group_batches.setdefault(str(group_key),
-                                                  [0, 0, 0.0])
+                                                  [0, 0, 0.0, 0, []])
                 g[0] += 1
                 g[1] += int(n_real)
                 g[2] += n_real / max(bucket, 1)
+                if lane_events:
+                    g[3] += int(sum(lane_events))
+                if lane_errors:
+                    g[4].extend(float(e) for e in lane_errors)
             if lane_full:
                 # spread across lanes of one batch: 0 under a batch-global
                 # decision, > 0 once lanes follow their own schedules
@@ -130,12 +153,18 @@ class ServeMetrics:
             self.total_steps += int(n_steps) * int(bucket)
 
     def observe_request(self, wait_s: float, latency_s: float,
-                        n_full: Optional[int] = None) -> None:
+                        n_full: Optional[int] = None,
+                        realized_error: Optional[float] = None,
+                        budget_events: Optional[int] = None) -> None:
         with self._lock:
             self.request_waits.append(float(wait_s))
             self.request_latencies.append(float(latency_s))
             if n_full is not None:
                 self.request_full_steps.append(int(n_full))
+            if realized_error is not None:
+                self.request_realized_errors.append(float(realized_error))
+            if budget_events is not None:
+                self.budget_events_total += int(budget_events)
 
     # --- aggregation -----------------------------------------------------
     @property
@@ -164,9 +193,15 @@ class ServeMetrics:
             hits, misses = self.compile_hits, self.compile_misses
             frac = self.full_steps / max(self.total_steps, 1)
             signatures = self.compiled_signatures
+            errors = list(self.request_realized_errors)
+            budget_events = self.budget_events_total
+            shed = self.shed_events
             per_group = {
                 k: {"batches": g[0], "requests": g[1],
-                    "mean_occupancy": round(g[2] / max(g[0], 1), 3)}
+                    "mean_occupancy": round(g[2] / max(g[0], 1), 3),
+                    "budget_events": g[3],
+                    "realized_error_p95": (round(percentile(g[4], 95), 6)
+                                           if g[4] else None)}
                 for k, g in self.group_batches.items()}
         return {
             "requests": len(lats),
@@ -181,6 +216,13 @@ class ServeMetrics:
             "full_step_fraction": round(frac, 4),
             "skip_compute_fraction": round(1.0 - frac, 4),
             "request_full_p50": percentile(fulls, 50),
+            # None (not 0.0) when no request carried a quality SLO
+            "realized_error_p50": (round(percentile(errors, 50), 6)
+                                   if errors else None),
+            "realized_error_p95": (round(percentile(errors, 95), 6)
+                                   if errors else None),
+            "budget_events": budget_events,
+            "shed_events": shed,
             "max_lane_full_spread": max(spread, default=0),
             "compile_hits": hits,
             "compile_misses": misses,
@@ -205,8 +247,9 @@ class ServeMetrics:
                 request_waits=list(self.request_waits),
                 request_latencies=list(self.request_latencies),
                 request_full_steps=list(self.request_full_steps),
+                request_realized_errors=list(self.request_realized_errors),
                 queue_depths=list(self.queue_depths),
-                group_batches={k: list(v)
+                group_batches={k: v[:4] + [list(v[4])]
                                for k, v in self.group_batches.items()},
                 _lock=threading.Lock(),
             )

@@ -52,6 +52,13 @@ from typing import List, NamedTuple, Optional
 
 @dataclasses.dataclass
 class DiffusionRequest:
+    """The single submission type for every serving path.
+
+    Sync (``DiffusionEngine.submit`` / ``run_batch(reqs=...)``) and
+    async (``AsyncDiffusionEngine.submit``) consume this object with
+    identical field semantics; open-loop drivers carry the planned
+    arrival offset in ``arrival_s`` instead of side-channel tuples.
+    """
     request_id: int
     seed: int
     # optional conditioning (e.g. reference latents for editing)
@@ -63,8 +70,20 @@ class DiffusionRequest:
     policy: Optional[object] = None
     # serving QoS: cut a batch early rather than let this lapse
     deadline_s: Optional[float] = None
+    # quality SLO: max prediction error the cache may accumulate
+    # between full forwards (snapped down to a budget tier by
+    # ``Policy.with_budget``).  None -> the policy's own default
+    # behaviour, bit-identical to serving without the SLO field.
+    max_error: Optional[float] = None
+    # open-loop stream plans: seconds after stream start at which this
+    # request should be submitted (0.0 for closed-loop clients)
+    arrival_s: float = 0.0
     # accounting (stamped by Scheduler.submit)
     submit_time: float = 0.0
+    # the budget actually served: == max_error normally, relaxed to a
+    # looser tier by load shedding when the queue is deep (stamped by
+    # Scheduler.submit; requests are never dropped)
+    effective_max_error: Optional[float] = None
 
 
 class BatchPlan(NamedTuple):
@@ -72,6 +91,10 @@ class BatchPlan(NamedTuple):
     bucket: int          # padded batch signature the engine will run
     formed_at: float     # scheduler clock when the batch was cut
     group_key: object = None   # compatibility group this cut came from
+    # budget-effective per-real-lane policies (stamped by form_batch:
+    # the request policy specialized to its effective_max_error tier);
+    # None entries fall back to the engine default in lane_policies
+    policies: Optional[List[object]] = None
 
     @property
     def n_real(self) -> int:
@@ -87,8 +110,12 @@ class BatchPlan(NamedTuple):
         (the warmed ladder) and scheduled pads activate only on steps the
         real lanes already paid for — never forcing extra forwards of
         their own."""
-        lanes = [r.policy if r.policy is not None else default
-                 for r in self.requests]
+        if self.policies is not None:
+            lanes = [p if p is not None else default
+                     for p in self.policies]
+        else:
+            lanes = [r.policy if r.policy is not None else default
+                     for r in self.requests]
         pad = lanes[0] if lanes else default
         lanes += [pad] * (self.bucket - self.n_real)
         return lanes
@@ -132,17 +159,27 @@ class Scheduler:
 
     def __init__(self, max_batch: int = 8, max_wait_s: float = 0.05,
                  pad_to_max: bool = False, clock=time.monotonic,
-                 group_policies: bool = False, default_policy=None):
+                 group_policies: bool = False, default_policy=None,
+                 shed_depth: Optional[int] = None,
+                 shed_factor: float = 4.0):
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
         self.pad_to_max = pad_to_max  # seed-compatible fixed signature
         self.clock = clock
         self.group_policies = group_policies
         self.default_policy = default_policy
+        # load shedding: when the queue holds >= shed_depth requests at
+        # submit time, the incoming request's effective error budget is
+        # relaxed by shed_factor (snapped to a looser tier) — quality is
+        # shed, never the request itself
+        self.shed_depth = shed_depth
+        self.shed_factor = shed_factor
+        self.shed_events = 0
         self.queue: List[DiffusionRequest] = []
         self.submitted = 0
         self.cv = threading.Condition(threading.RLock())
         self._key_cache: dict = {}   # policy/spec -> compatibility key
+        self._pol_cache: dict = {}   # (policy, budget) -> effective Policy
 
     def __len__(self) -> int:
         with self.cv:
@@ -156,6 +193,11 @@ class Scheduler:
                now: Optional[float] = None) -> None:
         with self.cv:
             req.submit_time = self.clock() if now is None else now
+            req.effective_max_error = req.max_error
+            if (req.max_error is not None and self.shed_depth is not None
+                    and len(self.queue) >= self.shed_depth):
+                req.effective_max_error = req.max_error * self.shed_factor
+                self.shed_events += 1
             self.queue.append(req)
             self.submitted += 1
             self.cv.notify_all()
@@ -169,9 +211,29 @@ class Scheduler:
     def _deadline_pressure(self, now: float) -> bool:
         return bool(self._lapsed(now))
 
-    def group_key(self, req: DiffusionRequest):
-        """Compatibility-group key of a request's (resolved) policy."""
+    def effective_policy(self, req: DiffusionRequest):
+        """The policy this request will actually be served with: its own
+        (or the default), specialized to the effective error budget —
+        ``Policy.with_budget`` snaps the budget to a tier, so the number
+        of distinct effective policies stays bounded."""
         pol = req.policy if req.policy is not None else self.default_policy
+        budget = req.effective_max_error
+        if pol is None or budget is None:
+            return pol
+        ck = (pol, budget)
+        got = self._pol_cache.get(ck)
+        if got is None:
+            from repro.core.policies import registry
+            got = self._pol_cache[ck] = (
+                registry.resolve(pol).with_budget(budget))
+        return got
+
+    def group_key(self, req: DiffusionRequest):
+        """Compatibility-group key of a request's (resolved) policy,
+        budget tier included — ``with_budget`` returns a distinct policy
+        value per tier and adaptive policies key on their full value, so
+        requests group by (policy, budget tier) automatically."""
+        pol = self.effective_policy(req)
         if pol is None:
             return None
         key = self._key_cache.get(pol)
@@ -305,7 +367,9 @@ class Scheduler:
             bucket = (self.max_batch if self.pad_to_max
                       else bucket_for(take, self.max_batch))
             return BatchPlan(requests=reqs, bucket=bucket, formed_at=now,
-                             group_key=key)
+                             group_key=key,
+                             policies=[self.effective_policy(r)
+                                       for r in reqs])
 
     def _canonical_lane_order(self, reqs: List[DiffusionRequest]
                               ) -> List[DiffusionRequest]:
@@ -321,8 +385,7 @@ class Scheduler:
         through untouched, and FIFO order is preserved within each
         policy value.
         """
-        pols = [r.policy if r.policy is not None else self.default_policy
-                for r in reqs]
+        pols = [self.effective_policy(r) for r in reqs]
         if all(p == pols[0] for p in pols):
             return reqs
         order = sorted(range(len(reqs)), key=lambda i: repr(pols[i]))

@@ -47,11 +47,11 @@ def test_registry_lists_policy_family():
 
 def test_resolve_spec_and_passthrough():
     spec = CachePolicy(kind="freqca", interval=7, rho=0.25, high_order=3)
-    pol = spec.resolve()
+    pol = policies.resolve(spec)
     assert isinstance(pol, policies.FreqCaPolicy)
     assert (pol.interval, pol.rho, pol.high_order) == (7, 0.25, 3)
     assert policies.resolve(pol) is pol            # objects pass through
-    assert spec.resolve() == pol                   # value-equal -> same key
+    assert policies.resolve(spec) == pol           # value-equal -> same key
     with pytest.raises(KeyError):
         policies.resolve(CachePolicy(kind="no-such-policy"))
     with pytest.raises(TypeError):
@@ -59,14 +59,15 @@ def test_resolve_spec_and_passthrough():
 
 
 def test_policy_metadata_matches_spec():
-    assert CachePolicy(kind="freqca").resolve().cache_units == 4
-    assert CachePolicy(kind="fora").resolve().cache_units == 1
-    assert CachePolicy(kind="taylorseer").resolve().cache_units == 3
-    assert CachePolicy(kind="none").resolve().cache_units == 0
+    resolve = policies.resolve
+    assert resolve(CachePolicy(kind="freqca")).cache_units == 4
+    assert resolve(CachePolicy(kind="fora")).cache_units == 1
+    assert resolve(CachePolicy(kind="taylorseer")).cache_units == 3
+    assert resolve(CachePolicy(kind="none")).cache_units == 0
     # warm-up length is derived from the predictor's history needs
-    assert CachePolicy(kind="freqca_a").resolve().needed_history == 3
-    assert CachePolicy(kind="freqca_a",
-                       high_order=4).resolve().needed_history == 5
+    assert resolve(CachePolicy(kind="freqca_a")).needed_history == 3
+    assert resolve(CachePolicy(kind="freqca_a",
+                               high_order=4)).needed_history == 5
 
 
 def test_compatibility_keys():
@@ -77,7 +78,7 @@ def test_compatibility_keys():
     key = policies.compatibility_key
     # identical resolved policies -> identical keys, spec or object
     assert key(CachePolicy(kind="freqca", interval=5)) == \
-        key(CachePolicy(kind="freqca", interval=5).resolve())
+        key(policies.resolve(CachePolicy(kind="freqca", interval=5)))
     # same (interval, needed_history) static schedule -> one family,
     # across different predictors
     assert key(CachePolicy(kind="freqca", interval=5)) == \
@@ -358,7 +359,7 @@ def test_cache_bytes_excludes_dummy_low_slot():
     state = cache_lib.init_state(pol, feat)
     assert cache_lib.cache_bytes(state, pol) == cache_lib.cache_bytes(state)
     # the new policy objects carry no dummy slots at all
-    obj = CachePolicy(kind="taylorseer", high_order=2).resolve()
+    obj = policies.resolve(CachePolicy(kind="taylorseer", high_order=2))
     st = obj.init(1, feat)
     want = (np.prod((1, 3) + feat) * 4      # hist [B, K, *feat] f32
             + 3 * 4                          # ts [B, K]
@@ -493,20 +494,20 @@ def test_poisson_stream_plan():
     from repro.launch.serve import poisson_stream
     plan = poisson_stream(200, rate=4.0, size=8, channels=4,
                           edit_every=5, seed=3)
-    times = [t for t, _ in plan]
-    assert len(plan) == 200
+    times = [r.arrival_s for r in plan]   # unified request API: the
+    assert len(plan) == 200               # request carries its arrival
     assert all(b > a for a, b in zip(times, times[1:]))
     gaps = np.diff([0.0] + times)
     assert abs(float(np.mean(gaps)) - 0.25) < 0.06    # mean ~ 1/rate
     # deterministic for a fixed seed; different seed -> different plan
     again = poisson_stream(200, rate=4.0, size=8, channels=4,
                            edit_every=5, seed=3)
-    assert [t for t, _ in again] == times
+    assert [r.arrival_s for r in again] == times
     other = poisson_stream(200, rate=4.0, size=8, channels=4,
                            edit_every=5, seed=4)
-    assert [t for t, _ in other] != times
+    assert [r.arrival_s for r in other] != times
     # editing requests keep their cadence inside the plan
-    assert all(plan[i][1].init_latents is not None
+    assert all(plan[i].init_latents is not None
                for i in range(4, 200, 5))
     with pytest.raises(ValueError):
         poisson_stream(4, rate=0.0, size=8, channels=4)
