@@ -32,9 +32,10 @@ def main(argv=None) -> None:
         _enable_smoke()
 
     from benchmarks import (fig2_freq_analysis, fig4_crf_mse, figc1_ablation,
-                            kernel_bench, roofline, serve_quality,
-                            serve_throughput, table1_flux, table2_qwen,
-                            table3_kontext, table4_qwen_edit, table5_memory)
+                            kernel_bench, roofline, serve_fleet,
+                            serve_quality, serve_throughput, table1_flux,
+                            table2_qwen, table3_kontext, table4_qwen_edit,
+                            table5_memory)
     csv = ["name,us_per_call,derived"]
 
     def headline(rows, pick="freqca(N=5)", metric="psnr"):
@@ -88,6 +89,11 @@ def main(argv=None) -> None:
         max_batch=4 if args.smoke else 8)
     csv.append("serve_quality,0,shed_rps_ratio=%s"
                % svq[-1]["rps_vs_no_shed"])
+    svf = serve_fleet.run(
+        n_requests=16 if args.smoke else 24,
+        max_batch=4 if args.smoke else 8)
+    csv.append("serve_fleet,0,rps_vs_1replica=%s"
+               % svf[-1]["rps_vs_1replica"])
     try:
         rl = roofline.run()
         csv.append("roofline,0,combos=%d" % len(rl))

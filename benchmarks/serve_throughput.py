@@ -90,7 +90,7 @@ def run(out: str = "results/bench/BENCH_serve.json",
         # pad-to-max only ever sees one signature; bucketed precompiles
         # the whole ladder — both amortised over the process lifetime
         warm = eng.warmup(buckets=[max_batch] if pad else None)
-        warm_misses = eng.metrics.compile_misses
+        warm_misses = eng.metrics_dict()["compile_misses"]
         bursts = mixed_stream(n_requests, B.IMG_SIZE, cfg.in_channels,
                               edit_every=4)
         outs, wall = serve_stream(eng, bursts)
@@ -102,7 +102,7 @@ def run(out: str = "results/bench/BENCH_serve.json",
     eng = _engine(full_fn, from_crf_fn, cfg, policy, max_batch,
                   max_wait_s=0.02)
     warm = eng.warmup()
-    warm_misses = eng.metrics.compile_misses
+    warm_misses = eng.metrics_dict()["compile_misses"]
     plan = poisson_stream(n_requests, rate, B.IMG_SIZE, cfg.in_channels,
                           edit_every=4)
     outs, wall = serve_open_loop(eng, plan)
@@ -159,7 +159,7 @@ def run_mixed(out: str = "results/bench/BENCH_serve_mixed.json",
         # second pass must be all hits either way.
         eng.warmup(policies=policies if grouped else ())
         serve_stream(eng, stream())
-        warm_misses = eng.metrics.compile_misses
+        warm_misses = eng.metrics_dict()["compile_misses"]
         outs, wall = serve_stream(eng, stream())
         s = eng.metrics.summary()
         fulls = {}
@@ -173,7 +173,7 @@ def run_mixed(out: str = "results/bench/BENCH_serve_mixed.json",
             "requests": len(outs),
             "wall_s": round(wall, 3),
             "req_per_s": round(len(outs) / max(wall, 1e-9), 3),
-            "steady_recompiles": eng.metrics.compile_misses - warm_misses,
+            "steady_recompiles": s["compile_misses"] - warm_misses,
             "compiled_signatures": s["compiled_signatures"],
             "signature_budget": budget,
             "policy_groups": s["policy_groups"],
@@ -240,7 +240,7 @@ def run_async(out: str = "results/bench/BENCH_serve_async.json",
         eng = _engine(full_fn, from_crf_fn, cfg, policy, max_batch,
                       max_wait_s=0.15)
         eng.warmup()
-        return eng, eng.metrics.compile_misses
+        return eng, eng.metrics_dict()["compile_misses"]
 
     # capacity probe on a warmed engine: drain one full bucket, so the
     # arrival rate can be set above what the server can absorb

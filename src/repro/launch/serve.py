@@ -32,14 +32,24 @@ activations.  ``--ungrouped`` restores the mixed-lane batch former
 (lanes in one batch follow their own activation schedules, one jit
 signature per lane-policy mix — warmed via ``cyclic_signatures``).
 
+``--replicas N`` (N > 1) serves the same stream through the
+multi-process fleet instead: N replica processes each train-free (the
+parent ships the trained params), warm their own bucket ladders, and
+the ``FleetRouter`` places requests by policy-compatibility affinity +
+load.  ``--replicas 1`` (the default) is the in-process path above,
+bit-identical to before the flag existed.
+
   PYTHONPATH=src python -m repro.launch.serve --requests 16 --interval 5
   PYTHONPATH=src python -m repro.launch.serve --arrival poisson --rate 2
   PYTHONPATH=src python -m repro.launch.serve --arrival poisson --rate 2 \
       --clients 4
+  PYTHONPATH=src python -m repro.launch.serve --arrival poisson --rate 4 \
+      --replicas 2
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import itertools
 import threading
 import time
@@ -214,7 +224,158 @@ def serve_threaded_open_loop(eng: DiffusionEngine, plan, clients: int = 4):
     return outs, wall
 
 
-def main():
+def _default_policy(args):
+    """The stream's default cache policy from the CLI flags (shared by
+    the in-process and fleet paths so the two serve identical streams)."""
+    if args.max_error is not None:
+        # quality-SLO serving: the error-budgeted policy spends each
+        # request's max_error between full forwards
+        return policy_lib.FreqCaErrorBudgetPolicy(
+            method=args.method, rho=0.25).with_budget(args.max_error)
+    return policy_lib.FreqCaPolicy(interval=args.interval,
+                                   method=args.method)
+
+
+def _stream_policies(args, default_pol):
+    """Per-request policy cycle for ``--mixed-policies`` (else None)."""
+    if not args.mixed_policies:
+        return None
+    return [default_pol,
+            policy_lib.ForaPolicy(interval=args.interval),
+            policy_lib.FreqCaAdaptivePolicy(method=args.method,
+                                            rho=0.25, tea_threshold=0.3)]
+
+
+def fleet_engine_factory(params_np, cfg_name: str, size: int, steps: int,
+                         batch: int, max_wait: float, method: str,
+                         interval: int, max_error, grouped: bool,
+                         shed_depth, shed_factor: float):
+    """Zero-arg-able engine builder for fleet workers.
+
+    Module-level (so ``functools.partial`` of it pickles under the
+    spawn start method) and takes params as a *numpy* pytree — the
+    child converts to device arrays after its own jax init, so the
+    parent's device state never crosses the process boundary.
+    """
+    cfg = config_lib.get_config(cfg_name)
+    params = jax.tree_util.tree_map(jnp.asarray, params_np)
+    n_tokens = (size // cfg.patch_size) ** 2
+
+    def full_fn(x, t):
+        tb = jnp.full((x.shape[0],), t)
+        out = dit.dit_forward(params, x, tb, cfg)
+        return out.velocity, out.crf
+
+    def from_crf_fn(crf, t):
+        tb = jnp.full((crf.shape[0],), t)
+        return dit.dit_from_crf(params, crf, tb, cfg, size, size)
+
+    if max_error is not None:
+        pol = policy_lib.FreqCaErrorBudgetPolicy(
+            method=method, rho=0.25).with_budget(max_error)
+    else:
+        pol = policy_lib.FreqCaPolicy(interval=interval, method=method)
+    return DiffusionEngine(full_fn, from_crf_fn,
+                           (size, size, cfg.in_channels),
+                           (n_tokens, cfg.d_model), pol,
+                           n_steps=steps, max_batch=batch,
+                           max_wait_s=max_wait, group_policies=grouped,
+                           shed_depth=shed_depth, shed_factor=shed_factor)
+
+
+def serve_fleet_open_loop(router, plan, clients: int = 4):
+    """Replay a timestamped arrival plan through a ``FleetRouter`` from
+    N concurrent client threads — the fleet twin of
+    ``serve_threaded_open_loop`` (same submit-at-arrival contract, the
+    router's drain flushes the tail on every replica)."""
+    if clients < 1:
+        raise ValueError(f"clients must be >= 1, got {clients}")
+    futures = [None] * len(plan)
+    t0 = time.perf_counter()
+
+    def client(k: int):
+        for i in range(k, len(plan), clients):
+            req = plan[i]
+            delay = req.arrival_s - (time.perf_counter() - t0)
+            if delay > 0:
+                time.sleep(delay)
+            futures[i] = router.submit(req)
+
+    threads = [threading.Thread(target=client, args=(k,), daemon=True)
+               for k in range(clients)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    router.drain()
+    outs = [f.result() for f in futures]
+    wall = time.perf_counter() - t0
+    return outs, wall
+
+
+def serve_fleet_main(args, params, size: int, channels: int):
+    """The ``--replicas N`` (N > 1) serving path: ship the trained
+    params to N worker processes, route the stream through the fleet
+    frontend, report fleet-wide + per-replica + routing metrics."""
+    from repro.serving.fleet import FleetRouter
+    default_pol = _default_policy(args)
+    pols = _stream_policies(args, default_pol)
+    extra = list(pols) if pols else []
+    if args.max_error is not None and args.shed_depth is not None:
+        extra.append(default_pol.with_budget(
+            args.max_error * args.shed_factor))
+    params_np = jax.tree_util.tree_map(np.asarray, params)
+    factory = functools.partial(
+        fleet_engine_factory, params_np, "dit-small", size, args.steps,
+        args.batch, args.max_wait, args.method, args.interval,
+        args.max_error, not args.ungrouped, args.shed_depth,
+        args.shed_factor)
+    if args.arrival == "poisson":
+        plan = poisson_stream(args.requests, args.rate, size, channels,
+                              edit_every=args.edit_every, policies=pols,
+                              max_error=args.max_error)
+    else:
+        plan = [r for burst in mixed_stream(
+            args.requests, size, channels, edit_every=args.edit_every,
+            policies=pols, max_error=args.max_error) for r in burst]
+        for r in plan:
+            r.arrival_s = 0.0
+    router = FleetRouter(factory, n_replicas=args.replicas,
+                         warm={"policies": extra},
+                         default_policy=default_pol)
+    print(f"booting {args.replicas} replicas (spawn + warmup) ...")
+    router.start()
+    for r in router.replicas:
+        print(f"[replica {r.idx}] pid {r.meta['pid']} warmed "
+              f"{r.meta['warmup_compiles']} executables in "
+              f"{r.meta['warmup_s']:.1f}s")
+    try:
+        outs, wall = serve_fleet_open_loop(
+            router, plan, clients=max(args.clients, 1))
+        fm = router.fleet_metrics()
+    finally:
+        router.shutdown(drain=True)
+    s = fm.summary()
+    fleet, routing = s["fleet"], s["routing"]
+    rps = len(outs) / wall if wall > 0 else float("nan")
+    print(f"[fleet  ] served {len(outs)} requests in {wall:.2f}s "
+          f"({rps:.2f} req/s) across {fleet['replicas']} replicas")
+    print(f"[fleet  ] occupancy {fleet['mean_occupancy']:.2f}  "
+          f"latency p50/p95 {fleet['request_latency_p50_s']:.3f}/"
+          f"{fleet['request_latency_p95_s']:.3f}s  "
+          f"skip-compute {fleet['skip_compute_fraction']:.2f}")
+    print(f"[fleet  ] routing: {routing['affinity_hits']} affinity, "
+          f"{routing['new_groups']} new groups, {routing['spills']} "
+          f"spills, {routing['requeued']} requeued, "
+          f"{routing['replicas_lost']} replicas lost")
+    for idx, pr in s["per_replica"].items():
+        print(f"[replica {idx}] {pr['requests']} reqs / "
+              f"{pr['batches']} batches, occupancy "
+              f"{pr['mean_occupancy']:.2f}, steady recompiles "
+              f"{pr['steady_recompiles']}")
+
+
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--interval", type=int, default=5)
@@ -252,14 +413,27 @@ def main():
                          "budgets are relaxed by --shed-factor (load "
                          "shedding: quality, never requests)")
     ap.add_argument("--shed-factor", type=float, default=4.0)
-    args = ap.parse_args()
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replica processes behind the fleet "
+                         "router; 1 (default) = the in-process engine "
+                         "path, unchanged")
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
 
     if args.requests < 1:
         raise SystemExit("--requests must be >= 1")
+    if args.replicas < 1:
+        raise SystemExit("--replicas must be >= 1")
     cfg = config_lib.get_config("dit-small")
     print("training dit-small on synthetic shapes ...")
     params = train_dit(cfg, args.train_steps, 16, ckpt_dir="")
     size = 32
+    if args.replicas > 1:
+        serve_fleet_main(args, params, size, cfg.in_channels)
+        return
     n_tokens = (size // cfg.patch_size) ** 2
 
     def full_fn(x, t):
@@ -281,21 +455,8 @@ def main():
                                shed_depth=args.shed_depth,
                                shed_factor=args.shed_factor)
 
-    if args.max_error is not None:
-        # quality-SLO serving: the error-budgeted policy spends each
-        # request's max_error between full forwards
-        default_pol = policy_lib.FreqCaErrorBudgetPolicy(
-            method=args.method, rho=0.25).with_budget(args.max_error)
-    else:
-        default_pol = policy_lib.FreqCaPolicy(interval=args.interval,
-                                              method=args.method)
-    policies = None
-    if args.mixed_policies:
-        policies = [default_pol,
-                    policy_lib.ForaPolicy(interval=args.interval),
-                    policy_lib.FreqCaAdaptivePolicy(method=args.method,
-                                                    rho=0.25,
-                                                    tea_threshold=0.3)]
+    default_pol = _default_policy(args)
+    policies = _stream_policies(args, default_pol)
     eng_freqca = engine(default_pol)
     eng_full = engine(policy_lib.NoCachePolicy())
 

@@ -98,6 +98,10 @@ class AsyncDiffusionEngine:
         return self.engine.warmup(buckets, lane_policy_sets,
                                   policies=policies)
 
+    def metrics_dict(self):
+        """Fleet-export hook: lossless snapshot of the shared metrics."""
+        return self.engine.metrics_dict()
+
     # --- submit path -----------------------------------------------------
     def submit(self, req: DiffusionRequest,
                now: Optional[float] = None) -> Future:

@@ -35,7 +35,7 @@ dispatch per prompt token.
 from __future__ import annotations
 
 import time
-from typing import Callable, List, NamedTuple, Optional, Sequence
+from typing import Callable, Dict, List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -143,6 +143,12 @@ class DiffusionEngine:
     @property
     def buckets(self) -> List[int]:
         return bucket_sizes(self.max_batch)
+
+    def metrics_dict(self) -> Dict:
+        """Lossless ``ServeMetrics`` snapshot (plain python values, safe
+        to ship across a process boundary) — the fleet-export hook a
+        replica worker answers ``("metrics",)`` with."""
+        return self.metrics.to_dict()
 
     def compiled_buckets(self) -> int:
         """Jit-cache probe: number of bucket executables compiled so far."""

@@ -1,0 +1,20 @@
+"""Multi-process serving fleet: N engine replicas behind a router.
+
+The single-process stack (scheduler -> engine -> async engine) scales
+to one hot process; this package is the next tier.  ``worker`` runs one
+``DiffusionEngine`` + ``AsyncDiffusionEngine`` per child process behind
+a stdlib ``multiprocessing.connection`` command/response channel;
+``router.FleetRouter`` is the frontend that admits
+``DiffusionRequest``s, routes them by policy-compatibility affinity
+plus replica load (so policy-pure batches keep forming fleet-wide),
+health-checks the replicas, requeues in-flight work off a dead one,
+and drains/shuts down with the same semantics as
+``AsyncDiffusionEngine``; ``fleet_metrics.FleetMetrics`` aggregates
+per-replica ``ServeMetrics`` snapshots into fleet-wide percentiles and
+per-replica/routing breakdowns.
+"""
+from repro.serving.fleet.fleet_metrics import FleetMetrics  # noqa: F401
+from repro.serving.fleet.router import FleetRouter          # noqa: F401
+from repro.serving.fleet.worker import Replica              # noqa: F401
+
+__all__ = ["FleetMetrics", "FleetRouter", "Replica"]

@@ -1,0 +1,412 @@
+"""Policy-aware request router over N engine replicas.
+
+``FleetRouter`` is the fleet analogue of ``AsyncDiffusionEngine``:
+``submit(request)`` is thread-safe and returns a
+``concurrent.futures.Future`` immediately; ``drain()`` waits for
+everything submitted so far (flushing partial batches on every
+replica); ``shutdown(drain=True)`` stops the workers gracefully
+(``drain=False`` cancels outstanding futures and terminates).  The
+difference is *where* batches form: the router never cuts batches
+itself — each replica runs its own ``Scheduler`` — so the router's job
+is to place requests such that the per-replica schedulers still see
+policy-pure streams.
+
+**Routing rule** (compatibility-key affinity + load):  each request is
+keyed by its resolved policy's ``compatibility_key()`` with the
+``max_error`` budget tier folded in (``Policy.with_budget`` — the same
+key the replica's scheduler groups by).  A group has a *home* replica;
+requests follow their home while it stays healthy and within
+``spill_slack`` outstanding requests of the least-loaded replica, so a
+group's requests pile onto ONE queue and fill policy-pure buckets
+fleet-wide instead of fragmenting into per-replica singles.  When the
+home falls behind by more than ``spill_slack`` (default: the replica's
+``max_batch`` — one full bucket of slack), the group *spills*: the
+least-loaded replica becomes the new home.  New groups start on the
+least-loaded replica.  Decisions are counted
+(``affinity_hits`` / ``new_groups`` / ``spills`` / ``requeued``) and
+reported through ``FleetMetrics``.
+
+**Health / failure**:  a monitor thread pings every replica on
+``health_interval_s``; one receiver thread per replica streams results
+back and resolves futures.  A dead replica is detected by pipe EOF
+(crash/SIGKILL) or a stale pong (hung worker — it is then killed so the
+EOF path takes over).  Death handling runs on the receiver thread
+*after* the pipe buffer is fully drained, so results that raced the
+crash still resolve; everything left in the replica's in-flight map is
+requeued onto the surviving replicas (sampling is deterministic per
+request seed, so a re-run resolves to the same latents) and each future
+still resolves exactly once.  With no survivors the orphaned futures
+fail with ``RuntimeError``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future, InvalidStateError
+from typing import Dict, List, Optional
+
+from repro.serving.fleet.fleet_metrics import FleetMetrics
+from repro.serving.fleet.worker import Replica
+from repro.serving.scheduler import DiffusionRequest
+
+__all__ = ["FleetRouter"]
+
+
+def _wire_request(req: DiffusionRequest) -> DiffusionRequest:
+    """Copy with device arrays made host-side so the request pickles."""
+    if req.init_latents is None:
+        return req
+    import dataclasses
+
+    import numpy as np
+    return dataclasses.replace(req, init_latents=np.asarray(req.init_latents))
+
+
+class FleetRouter:
+    """Frontend over N replica processes (see module docstring).
+
+    ``factory`` must be a picklable zero-arg callable returning an
+    (unwarmed) ``DiffusionEngine`` — a module-level function or a
+    ``functools.partial`` of one; each worker calls it in its own
+    process.  ``warm`` maps onto ``DiffusionEngine.warmup`` kwargs and
+    runs once per replica at boot.  ``default_policy`` mirrors the
+    engines' default and is only used to compute affinity keys for
+    requests with ``policy=None``.
+    """
+
+    def __init__(self, factory, n_replicas: int = 2, warm: Optional[dict]
+                 = None, default_policy=None, worker_env: Optional[dict]
+                 = None, spill_slack: Optional[int] = None,
+                 health_interval_s: float = 0.25,
+                 stale_after_s: float = 30.0,
+                 boot_timeout_s: float = 600.0):
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+        self.factory = factory
+        self.n_replicas = n_replicas
+        self.warm = dict(warm or {})
+        self.default_policy = default_policy
+        self.worker_env = dict(worker_env or {})
+        self.spill_slack = spill_slack
+        self.health_interval_s = health_interval_s
+        self.stale_after_s = stale_after_s
+        self.boot_timeout_s = boot_timeout_s
+
+        self.replicas: List[Replica] = []
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._home: Dict = {}         # affinity key -> replica idx
+        self._key_cache: Dict = {}    # (policy, max_error) -> affinity key
+        self._next_token = 0
+        self._stopping = False
+        self._started = False
+        self._stop_monitor = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self.counters: Dict[str, int] = {
+            "submitted": 0, "resolved": 0, "failed": 0,
+            "affinity_hits": 0, "new_groups": 0, "spills": 0,
+            "requeued": 0, "replicas_lost": 0, "duplicate_results": 0,
+        }
+
+    # --- lifecycle -------------------------------------------------------
+    def start(self) -> "FleetRouter":
+        """Spawn all replicas (they boot + warm in parallel), wait until
+        every one is ready, then start the receiver/monitor threads."""
+        with self._lock:
+            if self._stopping:
+                raise RuntimeError("router has been shut down")
+            if self._started:
+                return self
+            self._started = True
+        import multiprocessing as mp
+        ctx = mp.get_context("spawn")
+        self.replicas = [
+            Replica(i, self.factory, warm=self.warm, env=self.worker_env,
+                    ctx=ctx)
+            for i in range(self.n_replicas)]
+        deadline = time.monotonic() + self.boot_timeout_s
+        try:
+            for r in self.replicas:
+                r.wait_ready(max(deadline - time.monotonic(), 0.1))
+        except BaseException:
+            for r in self.replicas:
+                r.kill()
+            raise
+        if self.spill_slack is None:
+            self.spill_slack = max(r.meta.get("max_batch", 1)
+                                   for r in self.replicas)
+        for r in self.replicas:
+            th = threading.Thread(target=self._recv_loop, args=(r,),
+                                  name=f"fleet-recv-{r.idx}", daemon=True)
+            th.start()
+            self._threads.append(th)
+        mon = threading.Thread(target=self._monitor, name="fleet-monitor",
+                               daemon=True)
+        mon.start()
+        self._threads.append(mon)
+        return self
+
+    def __enter__(self) -> "FleetRouter":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.shutdown(drain=exc_type is None)
+
+    # --- routing ---------------------------------------------------------
+    def _affinity_key(self, req: DiffusionRequest):
+        """The compatibility-group key the replica's scheduler will file
+        this request under: resolved policy, budget tier folded in."""
+        pol = req.policy if req.policy is not None else self.default_policy
+        ck = (pol, req.max_error)
+        key = self._key_cache.get(ck)
+        if key is None:
+            if pol is None:
+                key = ("default", req.max_error)
+            else:
+                from repro.core.policies import registry
+                key = registry.compatibility_key(
+                    registry.resolve(pol).with_budget(req.max_error))
+            self._key_cache[ck] = key
+        return key
+
+    def _route(self, req: DiffusionRequest) -> Replica:
+        """Pick a replica (call with ``self._lock`` held)."""
+        healthy = [r for r in self.replicas if r.healthy]
+        if not healthy:
+            raise RuntimeError("no healthy replicas")
+        key = self._affinity_key(req)
+        least = min(healthy, key=lambda r: (len(r.inflight), r.idx))
+        idx = self._home.get(key)
+        home = next((r for r in healthy if r.idx == idx), None)
+        if home is None:
+            self._home[key] = least.idx
+            self.counters["new_groups"] += 1
+            return least
+        if len(home.inflight) - len(least.inflight) <= self.spill_slack:
+            self.counters["affinity_hits"] += 1
+            return home
+        self._home[key] = least.idx
+        self.counters["spills"] += 1
+        return least
+
+    # --- submit path -----------------------------------------------------
+    def submit(self, req: DiffusionRequest) -> Future:
+        """Thread-safe; the future resolves to this request's
+        ``DiffusionResult`` from whichever replica serves it (survivors
+        included, if its first home dies mid-flight)."""
+        fut: Future = Future()
+        with self._lock:
+            if self._stopping:
+                raise RuntimeError("router has been shut down")
+            if not self._started:
+                raise RuntimeError("router not started; call start()")
+            self.counters["submitted"] += 1
+            r = self._route(req)
+            token = self._next_token
+            self._next_token += 1
+            r.inflight[token] = (req, fut)
+        self._send_submit(r, token, req)
+        return fut
+
+    def _send_submit(self, r: Replica, token: int,
+                     req: DiffusionRequest) -> None:
+        try:
+            r.send(("submit", token, _wire_request(req)))
+        except (OSError, ValueError, BrokenPipeError):
+            # the pipe died between routing and sending: run the death
+            # path ourselves (idempotent) so this token is requeued too
+            self._on_replica_down(r)
+
+    def pending(self) -> int:
+        with self._lock:
+            return sum(len(r.inflight) for r in self.replicas)
+
+    # --- receive / failure paths -----------------------------------------
+    def _recv_loop(self, r: Replica) -> None:
+        while True:
+            try:
+                msg = r.conn.recv()
+            except (EOFError, OSError):
+                break
+            kind = msg[0]
+            if kind == "result":
+                self._finish(r, msg[1], value=msg[2])
+            elif kind == "error":
+                self._finish(r, msg[1], exc=msg[2])
+            elif kind == "pong":
+                r.last_pong = time.monotonic()
+            elif kind == "metrics":
+                r.metrics_box.append(msg[1])
+                r.metrics_event.set()
+            elif kind == "stopping":
+                with self._lock:
+                    r.stopped = True
+                    r.healthy = False
+        # EOF only after the buffer is drained: any result that raced a
+        # crash has already resolved its future above
+        self._on_replica_down(r)
+
+    def _finish(self, r: Replica, token: int, value=None, exc=None) -> None:
+        with self._cv:
+            entry = r.inflight.pop(token, None)
+            if entry is not None:
+                self.counters["resolved" if exc is None else "failed"] += 1
+            self._cv.notify_all()
+        if entry is None:
+            return                      # requeued or cancelled meanwhile
+        fut = entry[1]
+        if fut.cancelled():
+            return
+        try:
+            if exc is not None:
+                fut.set_exception(exc)
+            else:
+                fut.set_result(value)
+        except InvalidStateError:       # exactly-once guard, observable
+            with self._lock:
+                self.counters["duplicate_results"] += 1
+
+    def _on_replica_down(self, r: Replica) -> None:
+        """Mark ``r`` unhealthy and requeue its in-flight work onto the
+        survivors.  Idempotent; safe to call from any thread."""
+        with self._cv:
+            was_healthy = r.healthy
+            r.healthy = False
+            orphans = list(r.inflight.items())
+            r.inflight.clear()
+            if was_healthy and not r.stopped and not self._stopping:
+                self.counters["replicas_lost"] += 1
+            self._cv.notify_all()
+        if self._stopping:
+            for _, (_, fut) in orphans:
+                fut.cancel()
+            return
+        for token, (req, fut) in orphans:
+            if fut.cancelled():
+                continue
+            try:
+                with self._lock:
+                    nr = self._route(req)
+                    ntoken = self._next_token
+                    self._next_token += 1
+                    nr.inflight[ntoken] = (req, fut)
+                    self.counters["requeued"] += 1
+            except RuntimeError as e:   # no healthy replicas left
+                try:
+                    fut.set_exception(e)
+                except InvalidStateError:
+                    pass
+                continue
+            self._send_submit(nr, ntoken, req)
+
+    def _monitor(self) -> None:
+        seq = 0
+        while not self._stop_monitor.wait(self.health_interval_s):
+            for r in self.replicas:
+                if not r.healthy:
+                    continue
+                seq += 1
+                try:
+                    r.send(("ping", seq))
+                except (OSError, ValueError, BrokenPipeError):
+                    continue            # receiver thread handles the EOF
+                stale = time.monotonic() - r.last_pong
+                if stale > self.stale_after_s:
+                    # alive-but-unresponsive: kill, so the EOF path
+                    # (buffer-drain then requeue) takes over cleanly
+                    r.kill()
+
+    # --- drain / shutdown ------------------------------------------------
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until every future submitted so far has resolved.
+        Re-sends the flush on each wait tick, so partial batches formed
+        *during* the drain are cut too.  False on timeout."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            with self._lock:
+                replicas = [r for r in self.replicas if r.healthy]
+            for r in replicas:
+                try:
+                    r.send(("drain",))
+                except (OSError, ValueError, BrokenPipeError):
+                    pass
+            with self._cv:
+                if not any(r.inflight for r in self.replicas):
+                    return True
+                wait = 0.25
+                if deadline is not None:
+                    wait = min(wait, deadline - time.monotonic())
+                    if wait <= 0:
+                        return False
+                self._cv.wait(wait)
+
+    def shutdown(self, drain: bool = True,
+                 timeout: Optional[float] = None) -> None:
+        """Stop the fleet.  ``drain=True`` serves everything already
+        submitted first; ``drain=False`` cancels outstanding futures and
+        terminates the workers.  Idempotent."""
+        if drain and self._started and not self._stopping:
+            self.drain(timeout)
+        with self._lock:
+            self._stopping = True
+            orphans = [entry for r in self.replicas
+                       for entry in r.inflight.values()]
+            for r in self.replicas:
+                r.inflight.clear()
+                r.healthy = False
+        self._stop_monitor.set()
+        for _, fut in orphans:
+            fut.cancel()
+        for r in self.replicas:
+            try:
+                r.send(("stop",))
+            except (OSError, ValueError, BrokenPipeError):
+                pass
+        join_s = 30.0 if timeout is None else timeout
+        for r in self.replicas:
+            r.proc.join(join_s)
+            if r.proc.is_alive():
+                r.kill()
+                r.proc.join(5.0)
+
+    # --- observability ---------------------------------------------------
+    def status(self) -> Dict:
+        with self._lock:
+            return {
+                "replicas": [{
+                    "idx": r.idx,
+                    "pid": r.meta.get("pid"),
+                    "alive": r.proc.is_alive(),
+                    "healthy": r.healthy,
+                    "inflight": len(r.inflight),
+                    "last_pong_age_s": round(
+                        time.monotonic() - r.last_pong, 3),
+                } for r in self.replicas],
+                "healthy_replicas": sum(r.healthy for r in self.replicas),
+                "counters": dict(self.counters),
+            }
+
+    def replica_metrics(self, timeout: float = 30.0) -> Dict[int, dict]:
+        """Latest ``ServeMetrics.to_dict()`` snapshot per live replica."""
+        with self._lock:
+            replicas = [r for r in self.replicas if r.healthy]
+        for r in replicas:
+            r.metrics_event.clear()
+            try:
+                r.send(("metrics",))
+            except (OSError, ValueError, BrokenPipeError):
+                pass
+        out: Dict[int, dict] = {}
+        for r in replicas:
+            if r.metrics_event.wait(timeout) and r.metrics_box:
+                out[r.idx] = r.metrics_box[-1]
+        return out
+
+    def fleet_metrics(self, timeout: float = 30.0) -> FleetMetrics:
+        """Fleet-wide aggregation: merged ``ServeMetrics`` + per-replica
+        occupancy/recompile breakdown + routing-decision counters."""
+        snaps = self.replica_metrics(timeout)
+        with self._lock:
+            routing = dict(self.counters)
+            meta = {r.idx: dict(r.meta) for r in self.replicas}
+        return FleetMetrics(snaps, routing=routing, meta=meta)

@@ -1,0 +1,205 @@
+"""One engine replica per child process, behind a command pipe.
+
+``worker_main`` is the child entry point: it applies per-replica env
+overrides *before* importing jax (so a fleet can pin threads or
+platform per worker), builds its ``DiffusionEngine`` from a pickled
+zero-arg factory, warms the bucket ladder, wraps the engine in
+``AsyncDiffusionEngine``, and then serves a tiny command protocol over
+one duplex ``multiprocessing.connection`` pipe:
+
+    ("submit", token, request)  -> ("result", token, DiffusionResult)
+                                 | ("error", token, exception)
+    ("ping", seq)               -> ("pong", seq, {depth, pending})
+    ("metrics",)                -> ("metrics", ServeMetrics.to_dict())
+    ("drain",)                  -> ("drained",)   (flushes partial batches)
+    ("stop",) / SIGTERM         -> graceful drain, ("stopping",), exit
+
+Results stream back *as batches complete* — the worker attaches a
+done-callback to each future, so the command loop never blocks on
+device work and pings stay answered while a batch executes.  SIGTERM is
+a graceful drain: everything already queued is served before the
+process exits (a SIGKILL is the crash case the router's requeue path
+covers).  All sends share one lock; the loop polls so the SIGTERM flag
+is observed promptly.
+
+``Replica`` is the parent-side handle: it spawns the process (spawn
+context — never fork a process that already holds jax threads), owns
+the parent end of the pipe, and carries the router's per-replica
+bookkeeping (in-flight map, health flag, boot metadata).
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import signal
+import threading
+import time
+import traceback
+
+__all__ = ["Replica", "worker_main"]
+
+
+def _wire_exc(e: BaseException) -> BaseException:
+    """The exception itself when picklable, else a carrier with its text."""
+    try:
+        pickle.dumps(e)
+        return e
+    except Exception:
+        return RuntimeError(f"{type(e).__name__}: {e}")
+
+
+def worker_main(conn, env: dict, payload: bytes) -> None:
+    """Child-process entry: build, warm, serve until stop/SIGTERM.
+
+    ``payload`` is ``pickle.dumps((factory, warm))`` — deferred so the
+    factory's module (and therefore jax) is imported only after ``env``
+    is applied.  ``warm`` maps straight onto ``DiffusionEngine.warmup``
+    kwargs (``buckets`` / ``policies`` / ``lane_policy_sets``).
+    """
+    os.environ.update(env)
+    stop_flag = threading.Event()
+    try:
+        # SIGTERM = graceful drain (the router's polite shutdown and any
+        # process supervisor's default); SIGKILL remains the crash case
+        signal.signal(signal.SIGTERM, lambda s, f: stop_flag.set())
+    except ValueError:
+        pass
+
+    try:
+        factory, warm = pickle.loads(payload)
+        engine = factory()
+        warm = dict(warm or {})
+        warm_s = engine.warmup(
+            buckets=warm.get("buckets"),
+            lane_policy_sets=warm.get("lane_policy_sets", ()),
+            policies=warm.get("policies", ()))
+        warm_compiles = engine.metrics_dict()["compile_misses"]
+        from repro.serving.async_engine import AsyncDiffusionEngine
+        aeng = AsyncDiffusionEngine(engine).start()
+    except BaseException:
+        try:
+            conn.send(("boot_error", traceback.format_exc()))
+        finally:
+            conn.close()
+        return
+
+    import numpy as np
+    send_lock = threading.Lock()
+
+    def send(msg) -> None:
+        with send_lock:
+            try:
+                conn.send(msg)
+            except (OSError, ValueError, BrokenPipeError):
+                pass            # router is gone; keep draining regardless
+
+    def on_done(token: int):
+        # runs on the async engine's worker thread the moment the
+        # request's batch finishes — results stream, commands never wait
+        def cb(fut):
+            try:
+                res = fut.result()
+            except BaseException as e:
+                send(("error", token, _wire_exc(e)))
+            else:
+                send(("result", token,
+                      res._replace(latents=np.asarray(res.latents))))
+        return cb
+
+    send(("ready", {
+        "pid": os.getpid(),
+        "warmup_s": warm_s,
+        "warmup_compiles": warm_compiles,
+        "max_batch": engine.max_batch,
+        "buckets": list(engine.buckets),
+    }))
+
+    while not stop_flag.is_set():
+        if not conn.poll(0.1):
+            continue
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError):
+            break               # router vanished: drain what we have, exit
+        cmd = msg[0]
+        if cmd == "submit":
+            _, token, req = msg
+            try:
+                fut = aeng.submit(req)
+            except BaseException as e:
+                send(("error", token, _wire_exc(e)))
+                continue
+            fut.add_done_callback(on_done(token))
+        elif cmd == "ping":
+            send(("pong", msg[1], {"depth": engine.scheduler.depth,
+                                   "pending": aeng.pending()}))
+        elif cmd == "metrics":
+            send(("metrics", engine.metrics_dict()))
+        elif cmd == "drain":
+            # flush partial batches off the command loop so pings keep
+            # flowing while the tail drains
+            threading.Thread(
+                target=lambda: (aeng.drain(), send(("drained",))),
+                daemon=True).start()
+        elif cmd == "stop":
+            break
+
+    try:
+        aeng.shutdown(drain=True)       # graceful: serve the queue first
+    except BaseException:
+        pass
+    send(("stopping",))
+    conn.close()
+
+
+class Replica:
+    """Parent-side handle: spawned process + pipe + router bookkeeping."""
+
+    def __init__(self, idx: int, factory, warm=None, env=None, ctx=None):
+        if ctx is None:
+            import multiprocessing as mp
+            ctx = mp.get_context("spawn")
+        parent_conn, child_conn = ctx.Pipe()
+        payload = pickle.dumps((factory, dict(warm or {})))
+        self.idx = idx
+        self.proc = ctx.Process(
+            target=worker_main, args=(child_conn, dict(env or {}), payload),
+            name=f"fleet-replica-{idx}", daemon=True)
+        self.proc.start()
+        child_conn.close()
+        self.conn = parent_conn
+        self.send_lock = threading.Lock()
+        # router bookkeeping (guarded by the router's lock)
+        self.inflight: dict = {}      # token -> (request, Future)
+        self.healthy = False          # True from ready until death/stop
+        self.stopped = False          # clean stop observed
+        self.meta: dict = {}
+        self.last_pong = time.monotonic()
+        self.metrics_event = threading.Event()
+        self.metrics_box: list = []
+
+    def wait_ready(self, timeout: float) -> dict:
+        """Block until the worker finished boot + warmup (or raise)."""
+        if not self.conn.poll(timeout):
+            raise TimeoutError(
+                f"replica {self.idx} did not become ready in {timeout}s")
+        msg = self.conn.recv()
+        if msg[0] == "boot_error":
+            raise RuntimeError(
+                f"replica {self.idx} failed to boot:\n{msg[1]}")
+        if msg[0] != "ready":
+            raise RuntimeError(
+                f"replica {self.idx}: expected ready, got {msg[0]!r}")
+        self.meta = msg[1]
+        self.healthy = True
+        self.last_pong = time.monotonic()
+        return self.meta
+
+    def send(self, msg) -> None:
+        """Thread-safe send (submit path, monitor pings, control)."""
+        with self.send_lock:
+            self.conn.send(msg)
+
+    def kill(self) -> None:
+        if self.proc.is_alive():
+            self.proc.kill()

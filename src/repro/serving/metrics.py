@@ -24,12 +24,34 @@ lists + counters) and thread-safe — client threads and the async
 engine's worker record concurrently under one lock; ``summary()`` does
 the aggregation so it can be called once at the end of a serving run or
 periodically for dashboards.
+
+Fleet aggregation rides on three methods instead of field reads:
+``to_dict()`` is the lossless wire snapshot (plain lists/ints/floats,
+safe to pickle across a process boundary), ``from_dict()``
+reconstructs, and ``merge(parts)`` folds any number of
+snapshots-or-instances into one ``ServeMetrics`` whose ``summary()``
+reports true fleet-wide percentiles (raw observations are concatenated,
+never pre-aggregated, so p50/p95 are exact).  ``merge`` is associative
+— replicas may be merged pairwise, in any grouping — which is what lets
+a router aggregate per-replica snapshots incrementally.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 from typing import Dict, List, Optional
+
+
+# snapshot schema: counters sum under merge, lists concatenate, and the
+# optionals carry their own fold (min / max / sum-of-present)
+_COUNTER_FIELDS = ("compile_hits", "compile_misses", "full_steps",
+                   "total_steps", "budget_events_total", "shed_events")
+_LIST_FIELDS = ("batch_walls", "batch_buckets", "batch_occupancy",
+                "batch_lane_spread", "request_waits", "request_latencies",
+                "request_full_steps", "request_realized_errors",
+                "queue_depths")
+_OPTIONAL_FIELDS = ("time_to_first_result_s", "cache_state_bytes_per_lane",
+                    "compiled_signatures")
 
 
 def percentile(xs: List[float], q: float) -> float:
@@ -253,6 +275,78 @@ class ServeMetrics:
                                for k, v in self.group_batches.items()},
                 _lock=threading.Lock(),
             )
+
+    # --- serialization / fleet merge -------------------------------------
+    def to_dict(self) -> Dict:
+        """Lossless snapshot as plain python values — the wire format a
+        replica worker ships to the fleet router (and the ONE sanctioned
+        way to read raw counters from outside: benchmarks and the fleet
+        aggregator go through this instead of reaching into fields)."""
+        with self._lock:
+            d = {f: getattr(self, f) for f in _COUNTER_FIELDS}
+            d.update({f: list(getattr(self, f)) for f in _LIST_FIELDS})
+            d.update({f: getattr(self, f) for f in _OPTIONAL_FIELDS})
+            d["group_batches"] = {k: v[:4] + [list(v[4])]
+                                  for k, v in self.group_batches.items()}
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ServeMetrics":
+        """Inverse of :meth:`to_dict` (``to_dict . from_dict == id``)."""
+        m = cls()
+        for f in _COUNTER_FIELDS:
+            setattr(m, f, int(d[f]))
+        for f in _LIST_FIELDS:
+            setattr(m, f, list(d[f]))
+        for f in _OPTIONAL_FIELDS:
+            setattr(m, f, d[f])
+        m.group_batches = {k: v[:4] + [list(v[4])]
+                           for k, v in d["group_batches"].items()}
+        return m
+
+    @classmethod
+    def merge(cls, parts) -> "ServeMetrics":
+        """Fold snapshots (``ServeMetrics`` or ``to_dict`` dicts) from
+        independent engines into one fleet-wide instance.
+
+        Counters sum, observation lists concatenate (so ``summary()``
+        percentiles are exact fleet-wide, not averages of averages),
+        ``time_to_first_result_s`` is the fleet minimum,
+        ``cache_state_bytes_per_lane`` the maximum (replicas of one
+        deployment report the same figure), and ``compiled_signatures``
+        the fleet total of present probes.  Associative: merging merges
+        gives the same ``summary()`` as merging everything at once.
+        """
+        merged = cls()
+        for part in parts:
+            d = part if isinstance(part, dict) else part.to_dict()
+            for f in _COUNTER_FIELDS:
+                setattr(merged, f, getattr(merged, f) + int(d[f]))
+            for f in _LIST_FIELDS:
+                getattr(merged, f).extend(d[f])
+            if d["time_to_first_result_s"] is not None:
+                cur = merged.time_to_first_result_s
+                merged.time_to_first_result_s = (
+                    d["time_to_first_result_s"] if cur is None
+                    else min(cur, d["time_to_first_result_s"]))
+            if d["cache_state_bytes_per_lane"] is not None:
+                cur = merged.cache_state_bytes_per_lane
+                merged.cache_state_bytes_per_lane = max(
+                    cur if cur is not None else 0,
+                    d["cache_state_bytes_per_lane"])
+            if d["compiled_signatures"] is not None:
+                cur = merged.compiled_signatures
+                merged.compiled_signatures = (
+                    (cur if cur is not None else 0)
+                    + d["compiled_signatures"])
+            for k, v in d["group_batches"].items():
+                g = merged.group_batches.setdefault(k, [0, 0, 0.0, 0, []])
+                g[0] += v[0]
+                g[1] += v[1]
+                g[2] += v[2]
+                g[3] += v[3]
+                g[4].extend(v[4])
+        return merged
 
 
 def throughput(metrics: ServeMetrics, wall_s: float) -> Optional[float]:
