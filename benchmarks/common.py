@@ -18,34 +18,76 @@ from repro.launch.train import train_dit
 from repro.models import common as mcommon
 from repro.models import dit
 
-# --smoke (benchmarks/run.py) shrinks everything via these env knobs so
-# the whole suite finishes in CI-minutes on a CPU runner
-REDUCED = os.environ.get("BENCH_REDUCED", "") == "1"
-CKPT_DIR = "results/bench_ckpt_smoke" if REDUCED else "results/bench_ckpt"
-IMG_SIZE = int(os.environ.get("BENCH_IMG_SIZE", "32"))
-TRAIN_STEPS = int(os.environ.get("BENCH_TRAIN_STEPS", "200"))
-N_STEPS = int(os.environ.get("BENCH_SAMPLE_STEPS", "50"))
-BATCH = int(os.environ.get("BENCH_BATCH", "4"))
+# --smoke (benchmarks/run.py) shrinks everything via these env knobs.
+# Read at *call* time, never at import: the fleet router (and run.py
+# itself) set the knobs after this module may already be imported, and
+# an import-frozen read would silently pin full-scale settings — the
+# same bug class as the PR-4 INTERPRET freeze (see repro.analysis's
+# env-read-at-import rule).  The legacy module-level names (B.IMG_SIZE
+# etc.) still work via the PEP 562 __getattr__ below, which re-reads
+# the environment on every attribute access.
+
+
+def reduced() -> bool:
+    return os.environ.get("BENCH_REDUCED", "") == "1"
+
+
+def ckpt_dir() -> str:
+    return "results/bench_ckpt_smoke" if reduced() else "results/bench_ckpt"
+
+
+def img_size() -> int:
+    return int(os.environ.get("BENCH_IMG_SIZE", "32"))
+
+
+def train_steps() -> int:
+    return int(os.environ.get("BENCH_TRAIN_STEPS", "200"))
+
+
+def sample_steps() -> int:
+    return int(os.environ.get("BENCH_SAMPLE_STEPS", "50"))
+
+
+def bench_batch() -> int:
+    return int(os.environ.get("BENCH_BATCH", "4"))
+
+
+_ENV_ATTRS = {
+    "REDUCED": reduced, "CKPT_DIR": ckpt_dir, "IMG_SIZE": img_size,
+    "TRAIN_STEPS": train_steps, "N_STEPS": sample_steps,
+    "BATCH": bench_batch,
+}
+
+
+def __getattr__(name: str):
+    fn = _ENV_ATTRS.get(name)
+    if fn is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    return fn()
 
 
 def get_model():
     """Train (once) and cache the small DiT used by the quality benches."""
     cfg = config_lib.get_config("dit-small")
-    if REDUCED:
+    if reduced():
         cfg = config_lib.reduced(cfg)
     specs = dit.dit_specs(cfg)
     like = mcommon.init_params(specs, jax.random.key(0),
                                jnp.dtype(cfg.dtype))
-    step = checkpoint.latest_step(CKPT_DIR, "dit")
+    ckpt = ckpt_dir()
+    step = checkpoint.latest_step(ckpt, "dit")
     if step >= 0:
-        params = checkpoint.restore(CKPT_DIR, step, like, name="dit")
+        params = checkpoint.restore(ckpt, step, like, name="dit")
     else:
-        params = train_dit(cfg, TRAIN_STEPS, 16, ckpt_dir=CKPT_DIR,
-                           size=IMG_SIZE)
+        params = train_dit(cfg, train_steps(), 16, ckpt_dir=ckpt,
+                           size=img_size())
     return cfg, params
 
 
 def make_fns(cfg, params):
+    size = img_size()
+
     def full_fn(x, t):
         tb = jnp.full((x.shape[0],), t)
         out = dit.dit_forward(params, x, tb, cfg)
@@ -53,14 +95,14 @@ def make_fns(cfg, params):
 
     def from_crf_fn(crf, t):
         tb = jnp.full((crf.shape[0],), t)
-        return dit.dit_from_crf(params, crf, tb, cfg, IMG_SIZE, IMG_SIZE)
+        return dit.dit_from_crf(params, crf, tb, cfg, size, size)
 
     return full_fn, from_crf_fn
 
 
 def denoiser_flops_per_step(cfg) -> float:
     """Analytic FLOPs of one denoiser forward (batch 1)."""
-    s = (IMG_SIZE // cfg.patch_size) ** 2
+    s = (img_size() // cfg.patch_size) ** 2
     per_layer = (4 * cfg.d_model ** 2 + 2 * cfg.d_model * cfg.d_ff
                  ) * 2 * s + 2 * 2 * s * s * cfg.d_model
     return (cfg.n_layers + 2 * cfg.n_double) * per_layer
@@ -87,10 +129,12 @@ def ssim(a, b, data_range: float = 2.0) -> float:
 
 
 def run_policy(cfg, full_fn, from_crf_fn, policy: CachePolicy,
-               x0: jnp.ndarray, n_steps: int = N_STEPS,
+               x0: jnp.ndarray, n_steps: Optional[int] = None,
                time_it: bool = True) -> Dict:
+    if n_steps is None:
+        n_steps = sample_steps()
     ts = schedule.timesteps(n_steps)
-    n_tok = (IMG_SIZE // cfg.patch_size) ** 2
+    n_tok = (img_size() // cfg.patch_size) ** 2
     crf_shape = (x0.shape[0], n_tok, cfg.d_model)
 
     fn = jax.jit(lambda x: sampler.sample(full_fn, from_crf_fn, x, ts,

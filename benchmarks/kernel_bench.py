@@ -17,7 +17,6 @@ kernel wall times are correctness-priced, not speed-priced):
 """
 from __future__ import annotations
 
-import os
 import time
 
 import jax
@@ -29,9 +28,6 @@ from repro.core.policies import base as policy_base
 from repro.core.policies.freqca import FreqCaPolicy
 from repro.kernels import dct as dct_kernel
 from repro.models import attention as attn_lib
-
-SMOKE = os.environ.get("BENCH_REDUCED", "") == "1"
-
 
 def _wall(fn, *args, reps: int = 3) -> float:
     out = fn(*args)
@@ -150,7 +146,8 @@ def _flash_call(q, k, v):
 
 
 def run(out: str = "results/bench/BENCH_kernels.json"):
-    if SMOKE:
+    # call-time read: run.py --smoke sets BENCH_REDUCED after import
+    if B.reduced():
         batch, s, d = 1, 256, 128
         attn_s, heads, hd = 256, 2, 32
     else:

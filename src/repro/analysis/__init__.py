@@ -1,0 +1,39 @@
+"""repro.analysis — repo-aware invariant linter + runtime sanitizers.
+
+The serving stack's headline guarantees (zero steady-state recompiles,
+bitwise policy equivalence, exactly-once future resolution across the
+fleet) are invariants that every PR touches but no single test owns.
+This package turns them into mechanical checks:
+
+* **Static linter** (``python -m repro.analysis``, AST-based, stdlib
+  only — zero runtime deps): recompile hazards (import-frozen
+  ``os.environ`` reads, unhashable static jit args, python control flow
+  on traced values in policy methods), lock discipline (the
+  lock-acquisition graph across the serving stack must stay acyclic;
+  ``Future.set_result``/``set_exception`` must use the exactly-once
+  guard), and donated-buffer reuse after a donating jit call.
+  Findings are suppressible with ``# repro: allow[rule]: why`` comments
+  (the justification is mandatory).
+
+* **Runtime sanitizers** (``repro.analysis.runtime``, opt-in via
+  ``REPRO_SANITIZE=1``): an instrumented lock wrapper that records the
+  fleet-wide lock-order graph and fails fast on a would-be inversion,
+  and a tracer-leak check for policy pytrees that the engine runs after
+  every jitted dispatch.
+
+Import cost matters: ``repro.serving`` imports :mod:`.runtime` on every
+engine construction, so this ``__init__`` stays empty and the linter
+modules (which pull in :mod:`ast`) load only when the CLI runs.
+"""
+from __future__ import annotations
+
+__all__ = ["analyze_paths", "Finding"]
+
+
+def __getattr__(name: str):
+    # lazy: the serving stack imports repro.analysis.runtime; don't make
+    # it pay for the linter's ast machinery
+    if name in __all__:
+        from repro.analysis import core
+        return getattr(core, name)
+    raise AttributeError(name)

@@ -1,0 +1,86 @@
+"""``donated-reuse``: a donated buffer read after the donating call.
+
+``donate_argnums`` hands the argument's device buffer to XLA for reuse
+— the engine's per-bucket executables donate the noise batch
+(``donate_argnums=0``) so steady-state serving allocates nothing per
+step.  Reading the donated array afterwards raises
+``RuntimeError: invalid buffer`` on real backends, but *not* under CPU
+interpret mode, so CI's green run doesn't cover it — exactly the kind
+of invariant that needs a static check.
+
+The rule: within one function, after a call to a known donating
+wrapper (collected by the recompile pass: ``self._jit_run = jax.jit(f,
+donate_argnums=0)`` and decorator forms), any ``Name``-load of the
+variable that was passed in a donated position is flagged, unless the
+name was re-bound first.  Conservative and local by design: aliases
+through containers or attributes are out of scope (none exist in the
+repo's donating call sites).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from repro.analysis.core import Finding, Module, Project
+from repro.analysis.recompile import _collect_jit_wrappers, _call_key
+
+__all__ = ["run"]
+
+
+def run(project: Project, findings: List[Finding]) -> None:
+    for mod in project.modules:
+        if mod.tree is None:
+            continue
+        jits = _collect_jit_wrappers(mod)
+        donating = {k: v[2] for k, v in jits.items() if v[2]}
+        if not donating:
+            continue
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                _scan_function(mod, node, donating, findings)
+
+
+def _scan_function(mod: Module, fn: ast.FunctionDef,
+                   donating: Dict[str, Set[int]],
+                   findings: List[Finding]) -> None:
+    # donated variable name -> (line of the donating call, wrapper key)
+    dead: Dict[str, Tuple[int, str]] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            key = _call_key(node)
+            if key in donating:
+                for i in donating[key]:
+                    if i < len(node.args) and \
+                            isinstance(node.args[i], ast.Name):
+                        name = node.args[i].id
+                        dead.setdefault(name, (node.lineno, key))
+    if not dead:
+        return
+    # second pass in source order: a store revives the name, a load
+    # after the donating call (and before any store) is a bug
+    events: List[Tuple[int, int, str, str, ast.AST]] = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and node.id in dead:
+            kind = "store" if isinstance(node.ctx, (ast.Store, ast.Del)) \
+                else "load"
+            events.append((node.lineno, node.col_offset, node.id, kind,
+                           node))
+    events.sort(key=lambda e: (e[0], e[1]))
+    revived: Set[str] = set()
+    for lineno, _col, name, kind, node in events:
+        call_line, key = dead[name]
+        # a store ON the call line is `x = step(x)` — the target binds
+        # after the RHS runs, so it revives the name
+        if kind == "store" and lineno >= call_line:
+            revived.add(name)
+            continue
+        if lineno <= call_line:
+            continue
+        if name not in revived:
+            mod.flag(
+                node, "donated-reuse",
+                f"`{name}` was donated to {key}() on line {call_line} "
+                "(donate_argnums); its buffer now belongs to XLA and "
+                "reading it raises on non-interpret backends — rebind "
+                "the name or donate a copy",
+                findings)

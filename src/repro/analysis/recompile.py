@@ -1,0 +1,375 @@
+"""Recompile-hazard rules.
+
+``env-read-at-import``
+    ``os.environ``/``os.getenv`` *read* at module import time (module
+    or class body, outside any function).  Import-frozen env is the
+    PR-4 ``INTERPRET`` bug class: the fleet sets per-replica env right
+    before the child imports the module, and an import-time read
+    freezes the value for the process lifetime.  The sanctioned shape
+    is a call-time read (``kernels/ops.py``) or a PEP 562 module
+    ``__getattr__``.  Writes (``setdefault``/``update``/``pop``/
+    subscript store) are fine, as are reads feeding an ``os.environ``
+    write in the same statement (``launch/dryrun.py`` prepends to
+    ``XLA_FLAGS``).
+
+``unhashable-static-arg``
+    a list/dict/set display (or ``list()``/``dict()``/``set()`` call)
+    passed in a static position of a jit wrapper.  Static args key the
+    jit cache — unhashable values raise at dispatch, and mutable ones
+    invite aliasing bugs even when tupled later.
+
+``traced-branch``
+    Python control flow (``if``/``while``/ternary/``assert``) or
+    concretization (``float()``/``int()``/``bool()``/``.item()``/
+    ``np.asarray``) on traced values inside policy hot methods
+    (``decide``/``update``/``predict``/``observe``/``measure_error``).
+    Under ``lax.scan`` these either crash (TracerBoolConversionError)
+    or silently bake one branch into the compiled program.  Traced
+    roots are the method's array parameters and the traced
+    ``StepContext`` fields (``step_idx``/``t_now``/``x``); shape/dtype
+    inspection (``.shape``/``.ndim``/``.dtype``/``.size``) is static
+    and exempt, as are ``self.*`` attributes (config, not tracers).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import Finding, Module, Project
+
+__all__ = ["run"]
+
+# methods that run inside the sampler's trace (lax.scan body)
+_HOT_METHODS = {"decide", "update", "predict", "observe", "measure_error"}
+# StepContext fields that are traced arrays; the rest (batch,
+# feat_shape, crf_dtype) are static python
+_TRACED_CTX_FIELDS = {"step_idx", "t_now", "x"}
+# static inspection of a traced array — not a concretization
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+
+
+def run(project: Project, findings: List[Finding]) -> None:
+    for mod in project.modules:
+        if mod.tree is None:
+            continue
+        _env_reads(mod, findings)
+        jits = _collect_jit_wrappers(mod)
+        _static_arg_calls(mod, jits, findings)
+        _traced_branches(mod, findings)
+
+
+# --- env-read-at-import --------------------------------------------------
+
+def _is_environ(node: ast.AST) -> bool:
+    """Matches ``os.environ`` (and bare ``environ`` from-imports)."""
+    if isinstance(node, ast.Attribute) and node.attr == "environ":
+        return isinstance(node.value, ast.Name) and node.value.id == "os"
+    return isinstance(node, ast.Name) and node.id == "environ"
+
+
+def _env_read(node: ast.AST) -> Optional[ast.AST]:
+    """Return the offending node if ``node`` reads the environment."""
+    if isinstance(node, ast.Call):
+        f = node.func
+        # os.environ.get(...) / os.getenv(...)
+        if isinstance(f, ast.Attribute):
+            if f.attr == "get" and _is_environ(f.value):
+                return node
+            if f.attr == "getenv" and isinstance(f.value, ast.Name) \
+                    and f.value.id == "os":
+                return node
+        if isinstance(f, ast.Name) and f.id == "getenv":
+            return node
+    if isinstance(node, ast.Subscript) and _is_environ(node.value) \
+            and isinstance(node.ctx, ast.Load):
+        return node
+    return None
+
+
+def _env_reads(mod: Module, findings: List[Finding]) -> None:
+    # walk only import-time code: module body + class bodies, skipping
+    # function/lambda bodies (those are call-time by definition)
+    def visit_stmts(stmts):
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if isinstance(stmt, ast.ClassDef):
+                visit_stmts(stmt.body)
+                continue
+            # reads that feed an os.environ write in the same statement
+            # are the sanctioned append-to-XLA_FLAGS shape
+            writes_env = any(
+                isinstance(t, ast.Subscript) and _is_environ(t.value)
+                for t in getattr(stmt, "targets", []))
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Lambda):
+                    continue
+                hit = _env_read(node)
+                if hit is None:
+                    continue
+                if writes_env:
+                    continue
+                mod.flag(
+                    hit, "env-read-at-import",
+                    "os.environ read at module import time freezes the "
+                    "value for the process; read it at call time "
+                    "(accessor fn or module __getattr__, see "
+                    "kernels/ops.py)",
+                    findings)
+
+    visit_stmts(mod.tree.body)  # type: ignore[union-attr]
+
+
+# --- unhashable-static-arg -----------------------------------------------
+
+def _is_jax_jit(func: ast.AST) -> bool:
+    return (isinstance(func, ast.Attribute) and func.attr == "jit"
+            and isinstance(func.value, ast.Name)
+            and func.value.id == "jax") or (
+        isinstance(func, ast.Name) and func.id == "jit")
+
+
+def _static_positions(call: ast.Call) -> Tuple[Set[int], Set[str]]:
+    """Extract static arg positions/names from a ``jax.jit(...)`` call."""
+    nums: Set[int] = set()
+    names: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            for n in _int_elements(kw.value):
+                nums.add(n)
+        elif kw.arg == "static_argnames":
+            for s in _str_elements(kw.value):
+                names.add(s)
+    return nums, names
+
+
+def _int_elements(node: ast.AST):
+    nodes = node.elts if isinstance(node, (ast.Tuple, ast.List)) else [node]
+    for n in nodes:
+        if isinstance(n, ast.Constant) and isinstance(n.value, int):
+            yield n.value
+
+
+def _str_elements(node: ast.AST):
+    nodes = node.elts if isinstance(node, (ast.Tuple, ast.List)) else [node]
+    for n in nodes:
+        if isinstance(n, ast.Constant) and isinstance(n.value, str):
+            yield n.value
+
+
+def _collect_jit_wrappers(mod: Module):
+    """Map wrapper name -> (static_argnums, static_argnames, donate).
+
+    Covers ``X = jax.jit(fn, ...)``, ``self.X = jax.jit(fn, ...)`` and
+    ``@functools.partial(jax.jit, static_argnames=...)`` decorators.
+    Keys are ``"name"`` or ``"self.name"``; decorator-wrapped
+    functions are keyed by the function's own name.
+    """
+    jits: Dict[str, Tuple[Set[int], Set[str], Set[int]]] = {}
+
+    def record(key: str, call: ast.Call, shift: int = 0) -> None:
+        nums, names = _static_positions(call)
+        donate: Set[int] = set()
+        for kw in call.keywords:
+            if kw.arg == "donate_argnums":
+                donate.update(_int_elements(kw.value))
+        if nums or names or donate:
+            jits[key] = ({n + shift for n in nums}, names,
+                         {d + shift for d in donate})
+
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Assign) and \
+                isinstance(node.value, ast.Call) and \
+                _is_jax_jit(node.value.func):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    record(tgt.id, node.value)
+                elif isinstance(tgt, ast.Attribute) and \
+                        isinstance(tgt.value, ast.Name) and \
+                        tgt.value.id == "self":
+                    record(f"self.{tgt.attr}", node.value)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                # @functools.partial(jax.jit, static_argnames=(...))
+                if isinstance(dec, ast.Call) and dec.args and \
+                        _is_partial(dec.func) and _is_jax_jit(dec.args[0]):
+                    record(node.name, dec)
+                elif isinstance(dec, ast.Call) and _is_jax_jit(dec.func):
+                    record(node.name, dec)
+    return jits
+
+
+def _is_partial(func: ast.AST) -> bool:
+    return (isinstance(func, ast.Attribute) and func.attr == "partial") \
+        or (isinstance(func, ast.Name) and func.id == "partial")
+
+
+_UNHASHABLE_CTORS = {"list", "dict", "set", "bytearray"}
+
+
+def _unhashable(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.DictComp, ast.SetComp)):
+        return True
+    return (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and node.func.id in _UNHASHABLE_CTORS)
+
+
+def _call_key(call: ast.Call) -> Optional[str]:
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name) \
+            and f.value.id == "self":
+        return f"self.{f.attr}"
+    return None
+
+
+def _static_arg_calls(mod: Module, jits, findings: List[Finding]) -> None:
+    # 1) unhashable literal inside the jit(...) declaration itself is
+    #    checked implicitly by the call-site rule; also flag unhashable
+    #    values at call sites of known wrappers
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        # direct: jax.jit(fn, static_argnums=[...]) — a *list* is legal
+        # python but the elements rule below is about call sites; skip.
+        key = _call_key(node)
+        if key is None or key not in jits:
+            continue
+        nums, names, _donate = jits[key]
+        for i, arg in enumerate(node.args):
+            if i in nums and _unhashable(arg):
+                mod.flag(
+                    arg, "unhashable-static-arg",
+                    f"positional arg {i} of {key}() is static "
+                    "(static_argnums) but is an unhashable/mutable "
+                    "value; pass a tuple or scalar",
+                    findings)
+        for kw in node.keywords:
+            if kw.arg in names and _unhashable(kw.value):
+                mod.flag(
+                    kw.value, "unhashable-static-arg",
+                    f"keyword {kw.arg!r} of {key}() is static "
+                    "(static_argnames) but is an unhashable/mutable "
+                    "value; pass a tuple or scalar",
+                    findings)
+
+
+# --- traced-branch -------------------------------------------------------
+
+def _traced_roots(fn: ast.FunctionDef) -> Set[str]:
+    """Parameter names treated as traced arrays inside a hot method."""
+    roots: Set[str] = set()
+    args = fn.args
+    for a in list(args.posonlyargs) + list(args.args) + \
+            list(args.kwonlyargs):
+        if a.arg in ("self", "cls", "ctx"):
+            continue
+        roots.add(a.arg)
+    return roots
+
+
+class _TracedScan(ast.NodeVisitor):
+    def __init__(self, mod: Module, fn: ast.FunctionDef,
+                 findings: List[Finding]):
+        self.mod = mod
+        self.findings = findings
+        self.roots = _traced_roots(fn)
+
+    # -- classification ---------------------------------------------------
+    def _is_traced(self, node: ast.AST) -> bool:
+        """Conservative: does this expression *contain* a traced root
+        used as a value (not just its shape/dtype)?"""
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name) and sub.id in self.roots:
+                if not self._static_use(sub, node):
+                    return True
+            if isinstance(sub, ast.Attribute) and \
+                    isinstance(sub.value, ast.Name) and \
+                    sub.value.id == "ctx" and \
+                    sub.attr in _TRACED_CTX_FIELDS:
+                if not self._static_use(sub, node):
+                    return True
+        return False
+
+    @staticmethod
+    def _static_use(leaf: ast.AST, root: ast.AST) -> bool:
+        """True when ``leaf`` only ever appears under a static
+        attribute access (``x.shape`` etc.) inside ``root``."""
+        # find the parent attribute chains containing this exact leaf
+        for sub in ast.walk(root):
+            if isinstance(sub, ast.Attribute) and sub.value is leaf:
+                return sub.attr in _STATIC_ATTRS
+        return False
+
+    def _flag(self, node: ast.AST, what: str) -> None:
+        self.mod.flag(
+            node, "traced-branch",
+            f"{what} on a traced value inside a policy hot method; "
+            "use lax.cond / jnp.where (see freqca_eb.decide for the "
+            "sanctioned adaptive pattern)",
+            self.findings)
+
+    # -- visitors ---------------------------------------------------------
+    def visit_If(self, node: ast.If) -> None:
+        if self._is_traced(node.test):
+            self._flag(node, "python `if`")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        if self._is_traced(node.test):
+            self._flag(node, "python `while`")
+        self.generic_visit(node)
+
+    def visit_IfExp(self, node: ast.IfExp) -> None:
+        if self._is_traced(node.test):
+            self._flag(node, "ternary")
+        self.generic_visit(node)
+
+    def visit_Assert(self, node: ast.Assert) -> None:
+        if self._is_traced(node.test):
+            self._flag(node, "assert")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        f = node.func
+        if isinstance(f, ast.Name) and f.id in ("float", "int", "bool") \
+                and node.args and self._is_traced(node.args[0]):
+            self._flag(node, f"`{f.id}()`")
+        if isinstance(f, ast.Attribute) and f.attr == "item":
+            self._flag(node, "`.item()`")
+        if isinstance(f, ast.Attribute) and \
+                f.attr in ("asarray", "array") and \
+                isinstance(f.value, ast.Name) and \
+                f.value.id in ("np", "numpy") and \
+                node.args and self._is_traced(node.args[0]):
+            self._flag(node, f"`np.{f.attr}()`")
+        self.generic_visit(node)
+
+    # assignments can retire a root (x = 0 makes x static python)
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.generic_visit(node)
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Name) and tgt.id in self.roots \
+                    and not self._is_traced(node.value):
+                self.roots.discard(tgt.id)
+
+    # nested defs get their own parameter namespace — don't descend
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        pass
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        pass
+
+
+def _traced_branches(mod: Module, findings: List[Finding]) -> None:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        for item in node.body:
+            if isinstance(item, ast.FunctionDef) and \
+                    item.name in _HOT_METHODS:
+                # generic_visit: the hot method is itself a FunctionDef
+                # and visit() would hit the nested-def no-op
+                _TracedScan(mod, item, findings).generic_visit(item)

@@ -30,10 +30,12 @@ ASSIGNED = [
 ]
 
 INPUT_SHAPES = {
-    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
-    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
-    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
-    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+    "train_4k": {"seq_len": 4096, "global_batch": 256, "kind": "train"},
+    "prefill_32k": {"seq_len": 32768, "global_batch": 32,
+                    "kind": "prefill"},
+    "decode_32k": {"seq_len": 32768, "global_batch": 128,
+                   "kind": "decode"},
+    "long_500k": {"seq_len": 524288, "global_batch": 1, "kind": "decode"},
 }
 
 # window used for the sliding-window carve-out at long_500k on pure

@@ -534,7 +534,8 @@ def main():
 
     f_outs, f_wall = results["freqca"]
     u_outs, u_wall = results["full"]
-    ps = [psnr(f.latents, u.latents) for f, u in zip(f_outs, u_outs)]
+    ps = [psnr(f.latents, u.latents)
+          for f, u in zip(f_outs, u_outs, strict=True)]
     print(f"speedup {u_wall / f_wall:.2f}x  PSNR vs uncached: "
           f"{np.mean(ps):.2f} dB (min {np.min(ps):.2f})")
 

@@ -32,7 +32,7 @@ class BlockAux(NamedTuple):
         return cls(z, z, z)
 
     def __add__(self, other):
-        return BlockAux(*[a + b for a, b in zip(self, other)])
+        return BlockAux(*[a + b for a, b in zip(self, other, strict=True)])
 
 
 def block_specs(cfg: ModelConfig, kind: str, is_moe: bool):
@@ -114,10 +114,11 @@ def _layer_plan(cfg: ModelConfig):
         gs = cfg.attn_every
         # MoE cadence must align with the group for the scan to be valid
         assert cfg.n_layers % gs == 0
-        plan = tuple(zip(kinds[:gs], moes[:gs]))
+        plan = tuple(zip(kinds[:gs], moes[:gs], strict=True))
         for g in range(cfg.n_layers // gs):
             assert tuple(zip(kinds[g * gs:(g + 1) * gs],
-                             moes[g * gs:(g + 1) * gs])) == plan
+                             moes[g * gs:(g + 1) * gs],
+                             strict=True)) == plan
         return gs, cfg.n_layers // gs, plan
     # homogeneous check
     assert all(k == kinds[0] for k in kinds)

@@ -52,7 +52,8 @@ def init_params(specs, key, dtype=jnp.float32):
     leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
     keys = jax.random.split(key, len(leaves))
     return jax.tree.unflatten(
-        treedef, [_initializer(s, k, dtype) for s, k in zip(leaves, keys)]
+        treedef, [_initializer(s, k, dtype)
+                 for s, k in zip(leaves, keys, strict=True)]
     )
 
 

@@ -84,7 +84,7 @@ def update(cfg: AdamWConfig, grads, state: OptState, params):
     flat_mu = jax.tree.leaves(state.mu)
     flat_nu = jax.tree.leaves(state.nu)
     out = [upd(p, g, m, n) for p, g, m, n
-           in zip(flat_p, flat_g, flat_mu, flat_nu)]
+           in zip(flat_p, flat_g, flat_mu, flat_nu, strict=True)]
     new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
     new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
     new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])

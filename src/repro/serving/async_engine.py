@@ -39,7 +39,7 @@ from __future__ import annotations
 import threading
 import time
 from concurrent.futures import CancelledError  # noqa: F401  (re-export)
-from concurrent.futures import Future, wait
+from concurrent.futures import Future, InvalidStateError, wait
 from typing import List, Optional, Sequence
 
 from repro.serving.engine import DiffusionEngine
@@ -217,6 +217,13 @@ class AsyncDiffusionEngine:
             return
         if self._t0 is not None:
             self.metrics.observe_first_result(time.perf_counter() - self._t0)
-        for fut, res in zip(futs, results):
-            if fut is not None:
+        for fut, res in zip(futs, results, strict=True):
+            if fut is None:
+                continue
+            try:
                 fut.set_result(res)
+            except InvalidStateError:
+                # the future moved to RUNNING above, so a client cancel
+                # can't race us — but a second resolution must degrade
+                # to a counter, never kill the worker thread
+                self.metrics.observe_duplicate_result()

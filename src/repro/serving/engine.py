@@ -40,6 +40,7 @@ from typing import Callable, Dict, List, NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import runtime as sanitize
 from repro.configs.base import ModelConfig
 from repro.diffusion import sampler as sampler_lib
 from repro.diffusion import schedule
@@ -240,6 +241,11 @@ class DiffusionEngine:
         engine guarantees this by owning a single worker)."""
         x_init = self._place(self.build_x_init(plan))
         sig = self._normalize_signature(plan.lane_policies(self.policy))
+        if sanitize.enabled():
+            # a tracer stashed on a policy object would poison the jit
+            # cache key (new signature every batch -> recompiles) or
+            # crash later with a leaked-tracer error far from the cause
+            sanitize.check_tracer_leaks(sig, "policy signature")
         cache_before = self.compiled_buckets()
         t0 = time.perf_counter()
         x, n_forwards, lane_full, feedback = self._jit_run(x_init, sig)

@@ -45,6 +45,7 @@ import time
 from concurrent.futures import Future, InvalidStateError
 from typing import Dict, List, Optional
 
+from repro.analysis.runtime import make_condition, make_lock
 from repro.serving.fleet.fleet_metrics import FleetMetrics
 from repro.serving.fleet.worker import Replica
 from repro.serving.scheduler import DiffusionRequest
@@ -93,8 +94,8 @@ class FleetRouter:
         self.boot_timeout_s = boot_timeout_s
 
         self.replicas: List[Replica] = []
-        self._lock = threading.Lock()
-        self._cv = threading.Condition(self._lock)
+        self._lock = make_lock("FleetRouter._lock")
+        self._cv = make_condition("FleetRouter._cv", lock=self._lock)
         self._home: Dict = {}         # affinity key -> replica idx
         self._key_cache: Dict = {}    # (policy, max_error) -> affinity key
         self._next_token = 0

@@ -36,6 +36,8 @@ import threading
 import time
 import traceback
 
+from repro.analysis.runtime import make_lock
+
 __all__ = ["Replica", "worker_main"]
 
 
@@ -84,7 +86,7 @@ def worker_main(conn, env: dict, payload: bytes) -> None:
         return
 
     import numpy as np
-    send_lock = threading.Lock()
+    send_lock = make_lock("worker.send_lock")
 
     def send(msg) -> None:
         with send_lock:
@@ -168,7 +170,7 @@ class Replica:
         self.proc.start()
         child_conn.close()
         self.conn = parent_conn
-        self.send_lock = threading.Lock()
+        self.send_lock = make_lock("Replica.send_lock")
         # router bookkeeping (guarded by the router's lock)
         self.inflight: dict = {}      # token -> (request, Future)
         self.healthy = False          # True from ready until death/stop

@@ -41,11 +41,19 @@ import dataclasses
 import threading
 from typing import Dict, List, Optional
 
+from repro.analysis.runtime import make_lock
+
+
+def _metrics_lock() -> threading.Lock:
+    """Default-factory hook: sanitizer-aware lock construction."""
+    return make_lock("ServeMetrics._lock")
+
 
 # snapshot schema: counters sum under merge, lists concatenate, and the
 # optionals carry their own fold (min / max / sum-of-present)
 _COUNTER_FIELDS = ("compile_hits", "compile_misses", "full_steps",
-                   "total_steps", "budget_events_total", "shed_events")
+                   "total_steps", "budget_events_total", "shed_events",
+                   "duplicate_results")
 _LIST_FIELDS = ("batch_walls", "batch_buckets", "batch_occupancy",
                 "batch_lane_spread", "request_waits", "request_latencies",
                 "request_full_steps", "request_realized_errors",
@@ -90,6 +98,9 @@ class ServeMetrics:
     shed_events: int = 0
     # queue depth samples (taken whenever the engine polls the queue)
     queue_depths: List[int] = dataclasses.field(default_factory=list)
+    # futures whose second resolution was absorbed (requeue races on
+    # the exactly-once path; see FleetRouter._finish / _serve)
+    duplicate_results: int = 0
     # async serving: seconds from serving start to the first resolved
     # result (None until observed)
     time_to_first_result_s: Optional[float] = None
@@ -102,7 +113,7 @@ class ServeMetrics:
     # [n_batches, n_requests, occupancy_sum, budget_events, errors]
     group_batches: Dict = dataclasses.field(default_factory=dict)
     _lock: threading.Lock = dataclasses.field(
-        default_factory=threading.Lock, repr=False, compare=False)
+        default_factory=_metrics_lock, repr=False, compare=False)
 
     # --- recording -------------------------------------------------------
     def observe_compile(self, hit: bool) -> None:
@@ -137,6 +148,12 @@ class ServeMetrics:
         """Record the scheduler's cumulative shed counter (latest wins)."""
         with self._lock:
             self.shed_events = int(n)
+
+    def observe_duplicate_result(self) -> None:
+        """An already-resolved future was resolved again (requeue race
+        on the exactly-once path); absorbed, never raised."""
+        with self._lock:
+            self.duplicate_results += 1
 
     def observe_batch(self, bucket: int, n_real: int, wall_s: float,
                       n_forwards: int, n_steps: int,
@@ -273,7 +290,7 @@ class ServeMetrics:
                 queue_depths=list(self.queue_depths),
                 group_batches={k: v[:4] + [list(v[4])]
                                for k, v in self.group_batches.items()},
-                _lock=threading.Lock(),
+                _lock=_metrics_lock(),
             )
 
     # --- serialization / fleet merge -------------------------------------

@@ -45,9 +45,10 @@ sleep-polling.
 from __future__ import annotations
 
 import dataclasses
-import threading
 import time
 from typing import List, NamedTuple, Optional
+
+from repro.analysis.runtime import make_condition
 
 
 @dataclasses.dataclass
@@ -177,7 +178,9 @@ class Scheduler:
         self.shed_events = 0
         self.queue: List[DiffusionRequest] = []
         self.submitted = 0
-        self.cv = threading.Condition(threading.RLock())
+        # sanitizer-aware: a plain Condition(RLock()) unless
+        # REPRO_SANITIZE=1, then lock-order-instrumented
+        self.cv = make_condition("Scheduler.cv")
         self._key_cache: dict = {}   # policy/spec -> compatibility key
         self._pol_cache: dict = {}   # (policy, budget) -> effective Policy
 

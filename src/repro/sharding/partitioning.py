@@ -143,7 +143,7 @@ def shardings_for_specs(spec_tree, rules: Rules, mesh: Mesh):
         pspec = spec_for_axes(s.axes, rules)
         # drop mesh axes that don't divide the dim (uneven shard guard)
         fixed = []
-        for dim, entry in zip(s.shape, pspec):
+        for dim, entry in zip(s.shape, pspec, strict=False):
             if entry is None:
                 fixed.append(None)
             elif _div(dim, _axis_size(mesh, entry)):

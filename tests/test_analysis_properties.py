@@ -1,0 +1,134 @@
+"""Property tests for the lock-order cycle detector
+(``repro.analysis.graphs``), which both the static ``lock-order`` pass
+and the runtime sanitizer stand on.
+
+Hypothesis (via the ``tests/hypothesis_compat.py`` ci profile — the
+shim skips gracefully in the bare tier-1 env) drives two properties:
+
+* **soundness**: a random DAG — edges drawn only forward along a
+  random topological order — is NEVER flagged;
+* **completeness**: any random graph with an injected directed cycle
+  is ALWAYS flagged, and the reported witness is a genuine cycle of
+  the input graph.
+
+Deterministic twins at the bottom keep the core cases covered when
+hypothesis isn't installed.
+"""
+import random
+
+from hypothesis_compat import HAS_HYPOTHESIS, given, st  # noqa: F401
+
+from repro.analysis.graphs import find_cycle, has_path, would_close_cycle
+
+if HAS_HYPOTHESIS:
+    import hypothesis
+
+
+def _dag_from(seed: int, n: int, density: float):
+    """Random DAG: nodes 0..n-1 in a shuffled topological order, edges
+    only from earlier to later in that order."""
+    rng = random.Random(seed)
+    order = list(range(n))
+    rng.shuffle(order)
+    rank = {v: i for i, v in enumerate(order)}
+    graph = {v: set() for v in range(n)}
+    for a in range(n):
+        for b in range(n):
+            if a != b and rank[a] < rank[b] and rng.random() < density:
+                graph[a].add(b)
+    return graph
+
+
+def _check_witness(graph, cycle):
+    assert cycle[0] == cycle[-1], cycle
+    assert len(cycle) >= 2
+    for a, b in zip(cycle, cycle[1:], strict=False):
+        assert b in graph.get(a, ()), (cycle, graph)
+
+
+if HAS_HYPOTHESIS:
+
+    @given(st.integers(0, 2**32 - 1), st.integers(1, 12),
+           st.floats(0.0, 1.0))
+    def test_random_dag_never_flags(seed, n, density):
+        graph = _dag_from(seed, n, density)
+        assert find_cycle(graph) is None
+
+    @given(st.integers(0, 2**32 - 1), st.integers(2, 12),
+           st.floats(0.0, 1.0),
+           st.integers(2, 12))
+    def test_injected_cycle_always_flags(seed, n, density, cyc_len):
+        rng = random.Random(seed ^ 0x5EED)
+        graph = _dag_from(seed, n, density)
+        # inject a directed cycle over a random node subset
+        k = min(cyc_len, n)
+        members = rng.sample(range(n), k)
+        for a, b in zip(members, members[1:] + members[:1],
+                        strict=True):
+            graph.setdefault(a, set()).add(b)
+        cycle = find_cycle(graph)
+        assert cycle is not None, (members, graph)
+        _check_witness(graph, cycle)
+
+    @given(st.integers(0, 2**32 - 1), st.integers(1, 10),
+           st.floats(0.0, 0.6))
+    def test_would_close_cycle_matches_reachability(seed, n, density):
+        graph = _dag_from(seed, n, density)
+        rng = random.Random(seed ^ 0xC1C1E)
+        src = rng.randrange(n)
+        dst = rng.randrange(n)
+        # adding src->dst closes a cycle iff src is reachable from dst
+        assert would_close_cycle(graph, src, dst) == \
+            has_path(graph, dst, src)
+        if would_close_cycle(graph, src, dst):
+            graph.setdefault(src, set()).add(dst)
+            assert find_cycle(graph) is not None
+
+    @hypothesis.settings(max_examples=10)
+    @given(st.integers(0, 2**32 - 1))
+    def test_detector_is_iterative_on_deep_graphs(seed):
+        # a 5000-node path would blow the recursion limit on a
+        # recursive DFS; the detector must be iterative
+        n = 5000
+        graph = {i: {i + 1} for i in range(n - 1)}
+        assert find_cycle(graph) is None
+        graph[n - 1] = {seed % n}     # any back edge closes a cycle
+        _check_witness(graph, find_cycle(graph))
+
+
+# --- deterministic twins (run in the bare no-hypothesis env) -----------
+
+def test_dag_never_flags_deterministic():
+    for seed in range(25):
+        for density in (0.1, 0.5, 0.9):
+            assert find_cycle(_dag_from(seed, 9, density)) is None
+
+
+def test_injected_cycle_always_flags_deterministic():
+    for seed in range(25):
+        rng = random.Random(seed)
+        graph = _dag_from(seed, 9, 0.3)
+        members = rng.sample(range(9), rng.randint(2, 9))
+        for a, b in zip(members, members[1:] + members[:1],
+                        strict=True):
+            graph.setdefault(a, set()).add(b)
+        cycle = find_cycle(graph)
+        assert cycle is not None
+        _check_witness(graph, cycle)
+
+
+def test_two_node_inversion():
+    assert find_cycle({"A": {"B"}, "B": {"A"}}) is not None
+    assert find_cycle({"A": {"B"}}) is None
+
+
+def test_self_loop_is_a_cycle():
+    # the passes never emit self-edges (reentrancy), but the detector
+    # itself must be honest about them
+    cycle = find_cycle({"A": {"A"}})
+    _check_witness({"A": {"A"}}, cycle)
+
+
+def test_empty_and_single():
+    assert find_cycle({}) is None
+    assert find_cycle({"A": set()}) is None

@@ -67,7 +67,8 @@ def test_reduced_forward_and_train_step(arch):
     # at least one leaf changed
     changed = any(
         not jnp.allclose(a, b)
-        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)))
+        for a, b in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(new_params), strict=True))
     assert changed, arch
 
 

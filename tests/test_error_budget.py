@@ -329,7 +329,7 @@ def test_run_batch_reqs_equals_submit_then_run(dit_fns):
     for r in reqs():
         eng_b.submit(r, now=0.0)
     out_b = eng_b.run_batch(now=0.0)
-    for a, b in zip(out_a, out_b):
+    for a, b in zip(out_a, out_b, strict=True):
         np.testing.assert_array_equal(np.asarray(a.latents),
                                       np.asarray(b.latents))
         assert a.realized_error == b.realized_error
@@ -354,7 +354,7 @@ def test_no_budget_requests_are_bitwise_pre_slo(dit_fns):
     ]
     for eng in variants:
         outs = eng.run_batch(reqs=reqs(), now=0.0)
-        for g, o in zip(golden, outs):
+        for g, o in zip(golden, outs, strict=True):
             np.testing.assert_array_equal(np.asarray(g.latents),
                                           np.asarray(o.latents))
             assert o.realized_error is None

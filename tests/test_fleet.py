@@ -229,3 +229,87 @@ def test_router_rejects_bad_config():
     router = FleetRouter(tiny_engine, n_replicas=1)
     with pytest.raises(RuntimeError):       # not started yet
         router.submit(DiffusionRequest(request_id=0, seed=0))
+
+
+# ---------------------------------------------------------------------------
+# exactly-once futures: a seeded double-resolution is absorbed, counted
+# ---------------------------------------------------------------------------
+
+class _FakeReplica:
+    """Just enough of ``Replica`` for the router's result path: an
+    inflight table.  No process is spawned."""
+
+    def __init__(self):
+        self.inflight = {}
+        self.healthy = True
+        self.stopped = False
+
+
+def test_double_set_result_absorbed_by_duplicate_counter():
+    """The requeue race, replayed deterministically: a replica dies
+    after shipping a result, its in-flight request is requeued onto a
+    survivor under a NEW token with the SAME future, then both results
+    arrive.  The second resolution must bump ``duplicate_results`` —
+    never raise ``InvalidStateError`` into the receiver thread."""
+    from concurrent.futures import Future
+
+    router = FleetRouter(tiny_engine, n_replicas=2)   # never started
+    dead, survivor = _FakeReplica(), _FakeReplica()
+    req = DiffusionRequest(request_id=7, seed=0)
+    fut = Future()
+    dead.inflight[0] = (req, fut)       # original placement
+    survivor.inflight[1] = (req, fut)   # requeued under a new token
+
+    router._finish(dead, 0, value="res-a")      # first result wins
+    router._finish(survivor, 1, value="res-b")  # late duplicate
+
+    assert fut.result(timeout=1) == "res-a"
+    assert router.counters["duplicate_results"] == 1
+    assert router.counters["resolved"] == 2     # both tokens retired
+    assert not dead.inflight and not survivor.inflight
+
+
+def test_finish_is_idempotent_per_token():
+    """A token already popped (requeued/cancelled meanwhile) is a
+    no-op: no counter bump, no resolution attempt."""
+    from concurrent.futures import Future
+
+    router = FleetRouter(tiny_engine, n_replicas=1)
+    r = _FakeReplica()
+    fut = Future()
+    r.inflight[5] = (DiffusionRequest(request_id=1, seed=0), fut)
+    router._finish(r, 5, value="first")
+    router._finish(r, 5, value="again")         # token already gone
+    assert fut.result(timeout=1) == "first"
+    assert router.counters["duplicate_results"] == 0
+    assert router.counters["resolved"] == 1
+
+
+def test_async_engine_absorbs_duplicate_resolution():
+    """The async worker's ``_serve`` uses the same exactly-once guard:
+    a future that somehow resolved early must degrade to the
+    ``duplicate_results`` metric, not kill the worker thread."""
+    from concurrent.futures import Future
+
+    from repro.serving.async_engine import AsyncDiffusionEngine
+    from repro.serving.metrics import ServeMetrics
+
+    class _Eng:
+        def __init__(self):
+            self.metrics = ServeMetrics()
+
+        def execute_plan(self, plan):
+            return ["res"]
+
+    aeng = AsyncDiffusionEngine.__new__(AsyncDiffusionEngine)
+    aeng.engine = _Eng()
+    aeng.metrics = aeng.engine.metrics
+    aeng._t0 = None
+
+    fut = Future()
+    # repro: allow[future-guard]: seeding the double resolution this test exists to exercise
+    fut.set_result("early")
+    aeng._serve(plan=None, futs=[fut])  # must not raise
+    assert fut.result() == "early"
+    assert aeng.metrics.duplicate_results == 1
+    assert aeng.metrics.to_dict()["duplicate_results"] == 1

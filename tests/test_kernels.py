@@ -194,7 +194,7 @@ def test_ops_band_split_spectral_backends_agree(monkeypatch):
     for be in ("xla", "pallas"):
         monkeypatch.setenv("REPRO_KERNELS", be)
         outs[be] = ops.band_split_spectral(x, 0.125, "dct")
-    for a, b in zip(outs["xla"], outs["pallas"]):
+    for a, b in zip(outs["xla"], outs["pallas"], strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5)
 
 

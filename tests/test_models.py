@@ -10,9 +10,10 @@ from repro.models import attention, blocks, common, moe, ssm, transformer
 
 
 def tiny_cfg(**kw):
-    base = dict(arch_id="tiny", family="dense", n_layers=2, d_model=64,
-                n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
-                head_dim=16, dtype="float32", remat=False)
+    base = {"arch_id": "tiny", "family": "dense", "n_layers": 2,
+            "d_model": 64, "n_heads": 4, "n_kv_heads": 2, "d_ff": 128,
+            "vocab_size": 256, "head_dim": 16, "dtype": "float32",
+            "remat": False}
     base.update(kw)
     return ModelConfig(**base)
 

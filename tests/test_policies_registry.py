@@ -496,7 +496,7 @@ def test_poisson_stream_plan():
                           edit_every=5, seed=3)
     times = [r.arrival_s for r in plan]   # unified request API: the
     assert len(plan) == 200               # request carries its arrival
-    assert all(b > a for a, b in zip(times, times[1:]))
+    assert all(b > a for a, b in zip(times, times[1:], strict=False))
     gaps = np.diff([0.0] + times)
     assert abs(float(np.mean(gaps)) - 0.25) < 0.06    # mean ~ 1/rate
     # deterministic for a fixed seed; different seed -> different plan

@@ -1,0 +1,197 @@
+"""Runtime sanitizer tests (``repro.analysis.runtime``).
+
+The lock-order sanitizer must catch a seeded inversion *as an error*
+(not a deadlock), stay silent on consistent orders, and keep
+``threading.Condition`` semantics intact (the serving stack's cv.wait
+path runs through ``_release_save``/``_acquire_restore``).  With
+sanitizing off the factories return plain threading primitives — the
+default costs nothing.
+
+The tracer-leak sanitizer must spot a ``jax.core.Tracer`` smuggled out
+of a trace into host-side containers, and accept ordinary pytrees.
+"""
+import dataclasses
+import threading
+
+import pytest
+
+from repro.analysis import runtime as rt
+
+
+@pytest.fixture
+def sanitized(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    rt.reset_order_graph()
+    yield
+    rt.reset_order_graph()
+
+
+# ---------------------------------------------------------------------------
+# factories: plain primitives unless REPRO_SANITIZE=1
+# ---------------------------------------------------------------------------
+
+def test_factories_are_plain_when_disabled(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert isinstance(rt.make_lock("x"), type(threading.Lock()))
+    assert isinstance(rt.make_condition("x"), threading.Condition)
+    assert not rt.enabled()
+
+
+def test_enabled_reads_env_at_call_time(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert not rt.enabled()
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert rt.enabled()   # no import-frozen state
+
+
+# ---------------------------------------------------------------------------
+# lock-order sanitizer
+# ---------------------------------------------------------------------------
+
+def test_seeded_inversion_raises_not_deadlocks(sanitized):
+    a = rt.make_lock("A")
+    b = rt.make_lock("B")
+    with a:
+        with b:
+            pass                      # records A -> B
+    with b:
+        with pytest.raises(rt.LockOrderError, match="inversion"):
+            with a:                   # B -> A closes the cycle
+                pass
+    # the refused acquire never entered: both locks are free again
+    assert a.acquire(blocking=False)
+    a.release()
+    assert b.acquire(blocking=False)
+    b.release()
+
+
+def test_consistent_order_is_silent(sanitized):
+    a = rt.make_lock("A")
+    b = rt.make_lock("B")
+    c = rt.make_lock("C")
+    for _ in range(3):
+        with a:
+            with b:
+                with c:
+                    pass
+    assert rt.order_graph() == {"A": {"B", "C"}, "B": {"C"}}
+
+
+def test_inversion_detected_across_threads(sanitized):
+    # thread 1 takes A then B; the main thread then tries B then A —
+    # with real threads this interleaving is a timing-dependent
+    # deadlock, with the sanitizer it's a deterministic error
+    a = rt.make_lock("A")
+    b = rt.make_lock("B")
+
+    def t1():
+        with a:
+            with b:
+                pass
+
+    th = threading.Thread(target=t1)
+    th.start()
+    th.join()
+    with b:
+        with pytest.raises(rt.LockOrderError):
+            a.acquire()
+
+
+def test_rlock_reentrancy_is_not_an_edge(sanitized):
+    r = rt.make_rlock("R")
+    with r:
+        with r:                       # reentrant: no self-edge, no error
+            pass
+    assert rt.order_graph() == {}
+
+
+def test_condition_wait_notify_through_sanitized_lock(sanitized):
+    cv = rt.make_condition("CV")
+    hits = []
+
+    def waiter():
+        with cv:
+            while not hits:
+                cv.wait(timeout=5.0)
+            hits.append("woke")
+
+    th = threading.Thread(target=waiter)
+    th.start()
+    # wait() fully releases the sanitized lock, so the notifier can
+    # acquire it — this exercises _release_save/_acquire_restore
+    with cv:
+        hits.append("sent")
+        cv.notify_all()
+    th.join(timeout=5.0)
+    assert not th.is_alive()
+    assert hits == ["sent", "woke"]
+
+
+def test_condition_over_shared_lock_is_one_node(sanitized):
+    # the FleetRouter shape: _cv wraps _lock; using both nested must
+    # not look like two locks (no edge, no inversion)
+    lk = rt.make_lock("R._lock")
+    cv = rt.make_condition("R._cv", lock=lk)
+    with cv:
+        pass
+    with lk:
+        pass
+    assert rt.order_graph() == {}
+
+
+def test_scheduler_cv_is_sanitized_under_flag(sanitized):
+    from repro.serving.scheduler import Scheduler
+    sched = Scheduler(max_batch=2)
+    assert isinstance(sched.cv._lock, rt._TrackedLock)
+    # and the cv still works as a condition variable
+    with sched.cv:
+        sched.cv.notify_all()
+
+
+# ---------------------------------------------------------------------------
+# tracer-leak sanitizer
+# ---------------------------------------------------------------------------
+
+def test_tracer_leak_detected():
+    jax = pytest.importorskip("jax")
+    leak = []
+
+    @jax.jit
+    def f(x):
+        leak.append(x)               # the classic escape
+        return x * 2
+
+    f(1.0)
+    with pytest.raises(rt.TracerLeakError, match="leaked"):
+        rt.check_tracer_leaks({"stash": leak}, "policy state")
+
+
+def test_tracer_leak_walks_dataclasses_and_ignores_clean_values():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    @dataclasses.dataclass(frozen=True)
+    class Sig:
+        name: str
+        ring: tuple
+
+    clean = Sig("freqca", (jnp.zeros(3), [1, 2], {"k": "v"}))
+    rt.check_tracer_leaks(clean, "signature")   # no raise
+
+    leak = []
+
+    @jax.jit
+    def f(x):
+        leak.append(x)
+        return x
+
+    f(jnp.ones(2))
+    dirty = Sig("freqca", (leak[0],))
+    with pytest.raises(rt.TracerLeakError):
+        rt.check_tracer_leaks(dirty, "signature")
+
+
+def test_tracer_leak_handles_self_referential_containers():
+    d = {}
+    d["loop"] = d                     # must not recurse forever
+    rt.check_tracer_leaks(d, "state")

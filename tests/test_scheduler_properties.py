@@ -126,7 +126,7 @@ def check_invariants(submitted, cuts, sched, max_batch, grouped,
                     for r in c.plan.requests]
             assert vals == sorted(vals), "lane order not canonical"
             last: dict = {}
-            for v, i in zip(vals, ids):
+            for v, i in zip(vals, ids, strict=True):
                 assert last.get(v, -1) < i, "FIFO broken within value"
                 last[v] = i
         else:

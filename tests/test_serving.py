@@ -232,7 +232,7 @@ def test_padded_lanes_never_leak(dit_fns):
         eng.submit(DiffusionRequest(request_id=i, seed=i))
         solo.extend(eng.run_batch())          # bucket 1, same seeds
     assert solo[0].bucket == 1
-    for b, s in zip(batched, solo):
+    for b, s in zip(batched, solo, strict=True):
         np.testing.assert_allclose(np.asarray(b.latents),
                                    np.asarray(s.latents), atol=1e-5)
 
@@ -368,7 +368,7 @@ def test_mixed_policy_batch_per_lane_accounting(dit_fns):
     assert eng.metrics.summary()["max_lane_full_spread"] > 0
 
     # each lane matches its solo (bucket-1, uniform-policy) run
-    for o, pol in zip(out, lanes):
+    for o, pol in zip(out, lanes, strict=True):
         eng.submit(DiffusionRequest(request_id=o.request_id,
                                     seed=o.request_id, policy=pol))
         solo = eng.run_batch()[0]

@@ -134,7 +134,8 @@ def test_checkpoint_roundtrip(tmp_path):
     checkpoint.save(d, 7, params, name="t")
     assert checkpoint.latest_step(d, "t") == 7
     restored = checkpoint.restore(d, 7, params, name="t")
-    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+    for a, b in zip(jax.tree.leaves(params),
+                    jax.tree.leaves(restored), strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b))
 
 
