@@ -32,7 +32,7 @@ def main(argv=None) -> None:
         _enable_smoke()
 
     from benchmarks import (fig2_freq_analysis, fig4_crf_mse, figc1_ablation,
-                            kernel_bench, roofline, serve_fleet,
+                            kernel_bench, roofline, serve_chaos, serve_fleet,
                             serve_quality, serve_throughput, table1_flux,
                             table2_qwen, table3_kontext, table4_qwen_edit,
                             table5_memory)
@@ -94,6 +94,8 @@ def main(argv=None) -> None:
         max_batch=4 if args.smoke else 8)
     csv.append("serve_fleet,0,rps_vs_1replica=%s"
                % svf[-1]["rps_vs_1replica"])
+    svc = serve_chaos.run(n_requests=8 if args.smoke else 12)
+    csv.append("serve_chaos,0,restarts=%s" % svc[-1]["restarts"])
     try:
         rl = roofline.run()
         csv.append("roofline,0,combos=%d" % len(rl))

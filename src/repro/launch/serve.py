@@ -37,7 +37,12 @@ multi-process fleet instead: N replica processes each train-free (the
 parent ships the trained params), warm their own bucket ladders, and
 the ``FleetRouter`` places requests by policy-compatibility affinity +
 load.  ``--replicas 1`` (the default) is the in-process path above,
-bit-identical to before the flag existed.
+bit-identical to before the flag existed.  The fleet is supervised:
+``--max-restarts`` bounds per-slot restart attempts (dead replicas come
+back with exponential backoff; crash-loopers are retired) and
+``--max-inflight`` bounds per-replica queues (submit backpressures —
+or sheds quality, with ``--shed-depth`` set — instead of queueing
+without limit).
 
   PYTHONPATH=src python -m repro.launch.serve --requests 16 --interval 5
   PYTHONPATH=src python -m repro.launch.serve --arrival poisson --rate 2
@@ -342,7 +347,12 @@ def serve_fleet_main(args, params, size: int, channels: int):
             r.arrival_s = 0.0
     router = FleetRouter(factory, n_replicas=args.replicas,
                          warm={"policies": extra},
-                         default_policy=default_pol)
+                         default_policy=default_pol,
+                         max_restarts=args.max_restarts,
+                         max_inflight=args.max_inflight,
+                         shed_factor=(args.shed_factor
+                                      if args.shed_depth is not None
+                                      else None))
     print(f"booting {args.replicas} replicas (spawn + warmup) ...")
     router.start()
     for r in router.replicas:
@@ -368,6 +378,15 @@ def serve_fleet_main(args, params, size: int, channels: int):
           f"{routing['new_groups']} new groups, {routing['spills']} "
           f"spills, {routing['requeued']} requeued, "
           f"{routing['replicas_lost']} replicas lost")
+    if args.max_restarts > 0:
+        print(f"[fleet  ] supervision: {routing.get('restarts', 0)} "
+              f"restarts, {routing.get('boot_failures', 0)} boot "
+              f"failures, {routing.get('replicas_retired', 0)} retired, "
+              f"backoff {routing.get('restart_backoff_s', 0.0):.2f}s; "
+              f"{routing['stale_pong_kills']} stale-pong kills, "
+              f"{routing['poison_quarantined']} quarantined, "
+              f"{routing['backpressure_waits']} backpressured "
+              f"(peak inflight {routing['peak_inflight']})")
     for idx, pr in s["per_replica"].items():
         print(f"[replica {idx}] {pr['requests']} reqs / "
               f"{pr['batches']} batches, occupancy "
@@ -417,6 +436,13 @@ def build_parser() -> argparse.ArgumentParser:
                     help="engine replica processes behind the fleet "
                          "router; 1 (default) = the in-process engine "
                          "path, unchanged")
+    ap.add_argument("--max-restarts", type=int, default=2,
+                    help="restart attempts per replica slot before it is "
+                         "permanently retired (fleet supervision; 0 "
+                         "disables restarts — the PR-7 shrink-only fleet)")
+    ap.add_argument("--max-inflight", type=int, default=0,
+                    help="outstanding requests per replica before "
+                         "submit() backpressures (0 = unbounded)")
     return ap
 
 

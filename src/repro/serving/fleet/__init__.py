@@ -12,9 +12,22 @@ and drains/shuts down with the same semantics as
 ``AsyncDiffusionEngine``; ``fleet_metrics.FleetMetrics`` aggregates
 per-replica ``ServeMetrics`` snapshots into fleet-wide percentiles and
 per-replica/routing breakdowns.
+
+The fleet is self-healing: ``supervisor.FleetSupervisor`` restarts
+dead replicas with capped exponential backoff and retires
+crash-loopers; the router bounds per-replica in-flight work
+(backpressure with optional quality shedding), gives each request a
+retry budget, and quarantines poison requests (``PoisonRequestError``)
+after a solo kill or a failed isolation probe.  ``faults.FaultInjector``
+is the deterministic chaos layer that exercises all of this in
+``tests/test_chaos.py`` and ``benchmarks/serve_chaos.py``.
 """
+from repro.serving.fleet.faults import FaultInjector        # noqa: F401
 from repro.serving.fleet.fleet_metrics import FleetMetrics  # noqa: F401
-from repro.serving.fleet.router import FleetRouter          # noqa: F401
+from repro.serving.fleet.router import (                    # noqa: F401
+    FleetRouter, PoisonRequestError)
+from repro.serving.fleet.supervisor import FleetSupervisor  # noqa: F401
 from repro.serving.fleet.worker import Replica              # noqa: F401
 
-__all__ = ["FleetMetrics", "FleetRouter", "Replica"]
+__all__ = ["FaultInjector", "FleetMetrics", "FleetRouter",
+           "FleetSupervisor", "PoisonRequestError", "Replica"]

@@ -29,20 +29,30 @@ class FleetMetrics:
     ``per_replica`` maps replica idx -> ``ServeMetrics.to_dict()``
     snapshot; ``routing`` is the router's counter dict; ``meta`` maps
     replica idx -> the worker's ready metadata (pid, warmup_s,
-    warmup_compiles, max_batch, buckets).
+    warmup_compiles, max_batch, buckets).  ``router_snap`` is an
+    optional partial ``ServeMetrics`` dict of counters observed on the
+    router itself (``duplicate_results``, ``stale_pong_kills``) —
+    events no single worker can see — folded into ``merged()`` through
+    the same tolerant wire-format merge as the replica snapshots.
     """
 
     def __init__(self, per_replica: Dict[int, dict],
                  routing: Optional[dict] = None,
-                 meta: Optional[Dict[int, dict]] = None):
+                 meta: Optional[Dict[int, dict]] = None,
+                 router_snap: Optional[dict] = None):
         self.per_replica = dict(per_replica)
         self.routing = dict(routing or {})
         self.meta = dict(meta or {})
+        self.router_snap = dict(router_snap or {})
 
     def merged(self) -> ServeMetrics:
         """One ``ServeMetrics`` over the whole fleet (exact percentiles:
-        raw observation lists are concatenated, never pre-aggregated)."""
-        return ServeMetrics.merge(list(self.per_replica.values()))
+        raw observation lists are concatenated, never pre-aggregated),
+        router-side counters included."""
+        snaps = list(self.per_replica.values())
+        if self.router_snap:
+            snaps = snaps + [self.router_snap]
+        return ServeMetrics.merge(snaps)
 
     def steady_recompiles(self, idx: int) -> Optional[int]:
         """Compile misses on replica ``idx`` beyond its boot warmup —

@@ -26,6 +26,12 @@ is observed promptly.
 context — never fork a process that already holds jax threads), owns
 the parent end of the pipe, and carries the router's per-replica
 bookkeeping (in-flight map, health flag, boot metadata).
+
+For chaos testing, ``worker_main`` takes an optional ``fault`` spec
+(a plain dict produced by ``FaultInjector.spec_for``) as a *separate*
+process argument — separate because boot faults must fire before
+``pickle.loads(payload)`` pulls in the factory's module (and jax),
+keeping injected boot failures cheap and prompt.
 """
 from __future__ import annotations
 
@@ -50,15 +56,19 @@ def _wire_exc(e: BaseException) -> BaseException:
         return RuntimeError(f"{type(e).__name__}: {e}")
 
 
-def worker_main(conn, env: dict, payload: bytes) -> None:
+def worker_main(conn, env: dict, payload: bytes, fault=None) -> None:
     """Child-process entry: build, warm, serve until stop/SIGTERM.
 
     ``payload`` is ``pickle.dumps((factory, warm))`` — deferred so the
     factory's module (and therefore jax) is imported only after ``env``
     is applied.  ``warm`` maps straight onto ``DiffusionEngine.warmup``
     kwargs (``buckets`` / ``policies`` / ``lane_policy_sets``).
+
+    ``fault`` is an optional scripted-fault spec (see ``faults.py``);
+    ``None`` in production.
     """
     os.environ.update(env)
+    fault = dict(fault or {})
     stop_flag = threading.Event()
     try:
         # SIGTERM = graceful drain (the router's polite shutdown and any
@@ -66,6 +76,17 @@ def worker_main(conn, env: dict, payload: bytes) -> None:
         signal.signal(signal.SIGTERM, lambda s, f: stop_flag.set())
     except ValueError:
         pass
+
+    # injected boot faults fire before the payload is even unpickled —
+    # the parent must handle never-ready workers however early they die
+    if fault.get("boot_hang_s"):
+        time.sleep(float(fault["boot_hang_s"]))
+    if fault.get("boot_fail"):
+        try:
+            conn.send(("boot_error", "injected boot failure"))
+        finally:
+            conn.close()
+        return
 
     try:
         factory, warm = pickle.loads(payload)
@@ -95,10 +116,14 @@ def worker_main(conn, env: dict, payload: bytes) -> None:
             except (OSError, ValueError, BrokenPipeError):
                 pass            # router is gone; keep draining regardless
 
+    result_delay_s = float(fault.get("result_delay_s") or 0.0)
+
     def on_done(token: int):
         # runs on the async engine's worker thread the moment the
         # request's batch finishes — results stream, commands never wait
         def cb(fut):
+            if result_delay_s:
+                time.sleep(result_delay_s)
             try:
                 res = fut.result()
             except BaseException as e:
@@ -116,6 +141,22 @@ def worker_main(conn, env: dict, payload: bytes) -> None:
         "buckets": list(engine.buckets),
     }))
 
+    kill_after_submits = int(fault.get("kill_after_submits") or 0)
+    kill_on_request_id = fault.get("kill_on_request_id")
+    ignore_pings_after = int(fault.get("ignore_pings_after") or 0)
+    submits_seen = pings_seen = 0
+
+    # at most one drain flusher in flight: FleetRouter.drain() re-sends
+    # ("drain",) every tick, and each used to spawn a fresh thread
+    drain_thread: list = [None]
+
+    def drain_and_ack() -> None:
+        try:
+            aeng.drain()
+            send(("drained",))
+        finally:
+            drain_thread[0] = None
+
     while not stop_flag.is_set():
         if not conn.poll(0.1):
             continue
@@ -126,6 +167,14 @@ def worker_main(conn, env: dict, payload: bytes) -> None:
         cmd = msg[0]
         if cmd == "submit":
             _, token, req = msg
+            submits_seen += 1
+            # injected crash: die exactly like SIGKILL would — no drain,
+            # no goodbye message, the parent just sees the pipe EOF
+            if (kill_after_submits and submits_seen >= kill_after_submits) \
+                    or (kill_on_request_id is not None
+                        and getattr(req, "request_id", None)
+                        == kill_on_request_id):
+                os._exit(113)
             try:
                 fut = aeng.submit(req)
             except BaseException as e:
@@ -133,6 +182,9 @@ def worker_main(conn, env: dict, payload: bytes) -> None:
                 continue
             fut.add_done_callback(on_done(token))
         elif cmd == "ping":
+            pings_seen += 1
+            if ignore_pings_after and pings_seen > ignore_pings_after:
+                continue        # injected hang: alive but silent
             send(("pong", msg[1], {"depth": engine.scheduler.depth,
                                    "pending": aeng.pending()}))
         elif cmd == "metrics":
@@ -140,9 +192,12 @@ def worker_main(conn, env: dict, payload: bytes) -> None:
         elif cmd == "drain":
             # flush partial batches off the command loop so pings keep
             # flowing while the tail drains
-            threading.Thread(
-                target=lambda: (aeng.drain(), send(("drained",))),
-                daemon=True).start()
+            t = drain_thread[0]
+            if t is None or not t.is_alive():
+                t = threading.Thread(target=drain_and_ack,
+                                     name="fleet-worker-drain", daemon=True)
+                drain_thread[0] = t
+                t.start()
         elif cmd == "stop":
             break
 
@@ -157,24 +212,29 @@ def worker_main(conn, env: dict, payload: bytes) -> None:
 class Replica:
     """Parent-side handle: spawned process + pipe + router bookkeeping."""
 
-    def __init__(self, idx: int, factory, warm=None, env=None, ctx=None):
+    def __init__(self, idx: int, factory, warm=None, env=None, ctx=None,
+                 fault=None, start_n: int = 0):
         if ctx is None:
             import multiprocessing as mp
             ctx = mp.get_context("spawn")
         parent_conn, child_conn = ctx.Pipe()
         payload = pickle.dumps((factory, dict(warm or {})))
         self.idx = idx
+        self.start_n = start_n        # which incarnation of this slot
         self.proc = ctx.Process(
-            target=worker_main, args=(child_conn, dict(env or {}), payload),
+            target=worker_main,
+            args=(child_conn, dict(env or {}), payload, dict(fault or {})),
             name=f"fleet-replica-{idx}", daemon=True)
         self.proc.start()
         child_conn.close()
         self.conn = parent_conn
         self.send_lock = make_lock("Replica.send_lock")
         # router bookkeeping (guarded by the router's lock)
-        self.inflight: dict = {}      # token -> (request, Future)
+        self.inflight: dict = {}      # token -> (request, Future, deaths)
         self.healthy = False          # True from ready until death/stop
         self.stopped = False          # clean stop observed
+        self.probation = False        # reserved for an isolation probe
+        self.kill_requested = False   # kill() latch: fire at most once
         self.meta: dict = {}
         self.last_pong = time.monotonic()
         self.metrics_event = threading.Event()
@@ -202,6 +262,30 @@ class Replica:
         with self.send_lock:
             self.conn.send(msg)
 
-    def kill(self) -> None:
+    def kill(self) -> bool:
+        """Request a hard kill; latched so repeated calls (the monitor
+        re-checking a stale replica every tick) fire at most once.
+        Returns True only for the call that actually issued the kill."""
+        if self.kill_requested:
+            return False
+        self.kill_requested = True
         if self.proc.is_alive():
             self.proc.kill()
+        return True
+
+    def destroy(self, join_timeout: float = 5.0) -> None:
+        """Tear the replica fully down: kill, reap, close the pipe.
+
+        The cleanup path for workers that never became ready (boot
+        timeout / ``boot_error``) and for shutdown — without the join
+        the child lingers as a zombie, and without the close its pipe
+        fds leak for the router's lifetime."""
+        self.kill()
+        try:
+            self.proc.join(join_timeout)
+        except Exception:
+            pass
+        try:
+            self.conn.close()
+        except Exception:
+            pass

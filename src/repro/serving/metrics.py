@@ -53,7 +53,7 @@ def _metrics_lock() -> threading.Lock:
 # optionals carry their own fold (min / max / sum-of-present)
 _COUNTER_FIELDS = ("compile_hits", "compile_misses", "full_steps",
                    "total_steps", "budget_events_total", "shed_events",
-                   "duplicate_results")
+                   "duplicate_results", "stale_pong_kills")
 _LIST_FIELDS = ("batch_walls", "batch_buckets", "batch_occupancy",
                 "batch_lane_spread", "request_waits", "request_latencies",
                 "request_full_steps", "request_realized_errors",
@@ -101,6 +101,11 @@ class ServeMetrics:
     # futures whose second resolution was absorbed (requeue races on
     # the exactly-once path; see FleetRouter._finish / _serve)
     duplicate_results: int = 0
+    # alive-but-unresponsive replicas killed by the router's monitor
+    # (stale pong past stale_after_s).  Incremented router-side — the
+    # latch in Replica.kill guarantees at most one per incarnation —
+    # and summed across the fleet by the wire-format merge.
+    stale_pong_kills: int = 0
     # async serving: seconds from serving start to the first resolved
     # result (None until observed)
     time_to_first_result_s: Optional[float] = None
@@ -154,6 +159,11 @@ class ServeMetrics:
         on the exactly-once path); absorbed, never raised."""
         with self._lock:
             self.duplicate_results += 1
+
+    def observe_stale_pong_kill(self) -> None:
+        """A hung replica (stale pong) was killed by the monitor."""
+        with self._lock:
+            self.stale_pong_kills += 1
 
     def observe_batch(self, bucket: int, n_real: int, wall_s: float,
                       n_forwards: int, n_steps: int,
@@ -235,6 +245,7 @@ class ServeMetrics:
             errors = list(self.request_realized_errors)
             budget_events = self.budget_events_total
             shed = self.shed_events
+            stale_kills = self.stale_pong_kills
             per_group = {
                 k: {"batches": g[0], "requests": g[1],
                     "mean_occupancy": round(g[2] / max(g[0], 1), 3),
@@ -262,6 +273,7 @@ class ServeMetrics:
                                    if errors else None),
             "budget_events": budget_events,
             "shed_events": shed,
+            "stale_pong_kills": stale_kills,
             "max_lane_full_spread": max(spread, default=0),
             "compile_hits": hits,
             "compile_misses": misses,
@@ -309,16 +321,20 @@ class ServeMetrics:
 
     @classmethod
     def from_dict(cls, d: Dict) -> "ServeMetrics":
-        """Inverse of :meth:`to_dict` (``to_dict . from_dict == id``)."""
+        """Inverse of :meth:`to_dict` (``to_dict . from_dict == id``).
+
+        Missing fields default (0 / [] / None) so snapshots written by
+        an older wire schema — a replica one release behind its router
+        — still load."""
         m = cls()
         for f in _COUNTER_FIELDS:
-            setattr(m, f, int(d[f]))
+            setattr(m, f, int(d.get(f, 0)))
         for f in _LIST_FIELDS:
-            setattr(m, f, list(d[f]))
+            setattr(m, f, list(d.get(f, ())))
         for f in _OPTIONAL_FIELDS:
-            setattr(m, f, d[f])
+            setattr(m, f, d.get(f))
         m.group_batches = {k: v[:4] + [list(v[4])]
-                           for k, v in d["group_batches"].items()}
+                           for k, v in d.get("group_batches", {}).items()}
         return m
 
     @classmethod
@@ -338,25 +354,25 @@ class ServeMetrics:
         for part in parts:
             d = part if isinstance(part, dict) else part.to_dict()
             for f in _COUNTER_FIELDS:
-                setattr(merged, f, getattr(merged, f) + int(d[f]))
+                setattr(merged, f, getattr(merged, f) + int(d.get(f, 0)))
             for f in _LIST_FIELDS:
-                getattr(merged, f).extend(d[f])
-            if d["time_to_first_result_s"] is not None:
+                getattr(merged, f).extend(d.get(f, ()))
+            ttfr = d.get("time_to_first_result_s")
+            if ttfr is not None:
                 cur = merged.time_to_first_result_s
                 merged.time_to_first_result_s = (
-                    d["time_to_first_result_s"] if cur is None
-                    else min(cur, d["time_to_first_result_s"]))
-            if d["cache_state_bytes_per_lane"] is not None:
+                    ttfr if cur is None else min(cur, ttfr))
+            cache_bytes = d.get("cache_state_bytes_per_lane")
+            if cache_bytes is not None:
                 cur = merged.cache_state_bytes_per_lane
                 merged.cache_state_bytes_per_lane = max(
-                    cur if cur is not None else 0,
-                    d["cache_state_bytes_per_lane"])
-            if d["compiled_signatures"] is not None:
+                    cur if cur is not None else 0, cache_bytes)
+            sigs = d.get("compiled_signatures")
+            if sigs is not None:
                 cur = merged.compiled_signatures
                 merged.compiled_signatures = (
-                    (cur if cur is not None else 0)
-                    + d["compiled_signatures"])
-            for k, v in d["group_batches"].items():
+                    (cur if cur is not None else 0) + sigs)
+            for k, v in d.get("group_batches", {}).items():
                 g = merged.group_batches.setdefault(k, [0, 0, 0.0, 0, []])
                 g[0] += v[0]
                 g[1] += v[1]

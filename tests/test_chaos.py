@@ -1,0 +1,601 @@
+"""Chaos suite: the self-healing fleet under deterministic faults.
+
+Unit tier (no processes): supervisor backoff policy, ``FaultInjector``
+spec resolution, wire-format compatibility for the new counters, and
+the router's quarantine / isolation-probe / backpressure / shed logic
+replayed on fake in-process replicas.
+
+Integration tier (spawns real workers, slow): SIGKILL mid-stream with
+supervisor restart and a post-rejoin wave, a hung worker killed
+exactly once and restarted, a restart that succeeds after one injected
+boot failure, a crash-looping slot retired permanently, poison
+quarantine with healthy traffic untouched, and SIGKILL during an
+active ``drain()``.
+
+``tiny_engine`` and the fake-engine factory must stay module-level:
+the spawn start method pickles factories by reference and re-imports
+this module in the child.
+"""
+import pickle
+import threading
+import time
+from concurrent.futures import Future
+
+import pytest
+
+from repro.serving.engine import DiffusionRequest
+from repro.serving.fleet import (FaultInjector, FleetRouter,
+                                 FleetSupervisor, PoisonRequestError,
+                                 Replica)
+from repro.serving.fleet.worker import worker_main
+from repro.serving.metrics import ServeMetrics
+
+SIZE = 8
+N_STEPS = 6
+MAX_BATCH = 4
+
+
+def tiny_engine():
+    """Zero-arg picklable factory: reduced DiT engine, built fresh in
+    whichever process calls it (deterministic from key(0), so replicas
+    and incarnations are identical)."""
+    import jax
+    import jax.numpy as jnp
+
+    import repro.configs as config_lib
+    from repro.core.cache import CachePolicy
+    from repro.models import common, dit
+    from repro.serving.engine import DiffusionEngine
+
+    cfg = config_lib.reduced(config_lib.get_config("dit-small"))
+    params = common.init_params(dit.dit_specs(cfg), jax.random.key(0))
+
+    def full_fn(x, t):
+        tb = jnp.full((x.shape[0],), t)
+        out = dit.dit_forward(params, x, tb, cfg)
+        return out.velocity, out.crf
+
+    def from_crf_fn(crf, t):
+        tb = jnp.full((crf.shape[0],), t)
+        return dit.dit_from_crf(params, crf, tb, cfg, SIZE, SIZE)
+
+    return DiffusionEngine(full_fn, from_crf_fn,
+                           (SIZE, SIZE, cfg.in_channels),
+                           (16, cfg.d_model),
+                           CachePolicy(kind="freqca", interval=3),
+                           n_steps=N_STEPS, max_batch=MAX_BATCH,
+                           max_wait_s=0.05)
+
+
+def _requests(n, start=0, max_error=None):
+    return [DiffusionRequest(request_id=start + i, seed=start + i,
+                             max_error=max_error) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# supervisor policy (unit)
+# ---------------------------------------------------------------------------
+
+class _StubRouter:
+    n_replicas = 2
+
+
+def test_backoff_exponential_and_capped():
+    sup = FleetSupervisor(_StubRouter(), max_restarts=3,
+                          backoff_base_s=0.5, backoff_cap_s=4.0)
+    assert sup.backoff_s(0) == 0.5
+    assert sup.backoff_s(1) == 1.0
+    assert sup.backoff_s(2) == 2.0
+    assert sup.backoff_s(3) == 4.0
+    assert sup.backoff_s(10) == 4.0          # capped
+    with pytest.raises(ValueError):
+        FleetSupervisor(_StubRouter(), max_restarts=0)
+
+
+def test_can_recover_tracks_retired_slots():
+    sup = FleetSupervisor(_StubRouter(), max_restarts=1)
+    assert sup.can_recover()
+    sup.retired_slots.add(0)
+    assert sup.can_recover()                 # slot 1 could still restart
+    sup.retired_slots.add(1)
+    assert not sup.can_recover()
+
+
+# ---------------------------------------------------------------------------
+# fault injector (unit)
+# ---------------------------------------------------------------------------
+
+def test_fault_specs_are_scoped_and_deterministic():
+    fi = (FaultInjector(seed=7)
+          .kill_after_submits(2, slot=0, start_n=0)
+          .fail_boot(slot=0, start_n=1)
+          .mute_pings_after(3)                     # every slot, every boot
+          .delay_results(0.1, jitter_s=0.05, slot=1))
+    assert fi.spec_for(0, 0) == {"kill_after_submits": 2,
+                                 "ignore_pings_after": 3}
+    assert fi.spec_for(0, 1) == {"boot_fail": True,
+                                 "ignore_pings_after": 3}
+    assert fi.spec_for(0, 2) == {"ignore_pings_after": 3}
+    s1 = fi.spec_for(1, 0)
+    assert 0.1 <= s1["result_delay_s"] <= 0.15
+    # deterministic: same (seed, slot, start_n) -> same jitter; a
+    # different incarnation draws a different one
+    fi2 = FaultInjector(seed=7).delay_results(0.1, jitter_s=0.05, slot=1)
+    assert fi2.spec_for(1, 0)["result_delay_s"] == s1["result_delay_s"]
+    assert fi2.spec_for(1, 1)["result_delay_s"] != s1["result_delay_s"]
+
+
+def test_fault_later_rules_win():
+    fi = FaultInjector().kill_after_submits(5).kill_after_submits(1, slot=0)
+    assert fi.spec_for(0, 0) == {"kill_after_submits": 1}
+    assert fi.spec_for(1, 0) == {"kill_after_submits": 5}
+
+
+# ---------------------------------------------------------------------------
+# wire format: stale_pong_kills counter + old-schema tolerance (satellite)
+# ---------------------------------------------------------------------------
+
+def test_stale_pong_kills_on_the_wire():
+    m = ServeMetrics()
+    m.observe_stale_pong_kill()
+    m.observe_stale_pong_kill()
+    assert m.summary()["stale_pong_kills"] == 2
+    assert ServeMetrics.from_dict(m.to_dict()).stale_pong_kills == 2
+    merged = ServeMetrics.merge([m, m.to_dict()])
+    assert merged.stale_pong_kills == 4
+
+
+def test_wire_format_tolerates_older_schema():
+    """A snapshot written before the new counters existed (a replica
+    one release behind its router) must still load and merge."""
+    old = ServeMetrics().to_dict()
+    del old["stale_pong_kills"]
+    assert ServeMetrics.from_dict(old).stale_pong_kills == 0
+    # partial router-side snapshots carry only the counters the router
+    # can observe — merge fills everything else with defaults
+    merged = ServeMetrics.merge(
+        [old, {"stale_pong_kills": 3, "duplicate_results": 1}])
+    assert merged.stale_pong_kills == 3
+    assert merged.duplicate_results == 1
+
+
+def test_fleet_metrics_fold_router_snap():
+    from repro.serving.fleet import FleetMetrics
+    fm = FleetMetrics({0: ServeMetrics().to_dict()},
+                      router_snap={"stale_pong_kills": 2,
+                                   "duplicate_results": 1})
+    merged = fm.merged()
+    assert merged.stale_pong_kills == 2
+    assert merged.duplicate_results == 1
+
+
+def test_launcher_robustness_flags():
+    from repro.launch.serve import build_parser
+    args = build_parser().parse_args([])
+    assert args.max_restarts == 2 and args.max_inflight == 0
+    args = build_parser().parse_args(
+        ["--max-restarts", "0", "--max-inflight", "8"])
+    assert args.max_restarts == 0 and args.max_inflight == 8
+
+
+# ---------------------------------------------------------------------------
+# quarantine / probe / backpressure logic on fake replicas (unit)
+# ---------------------------------------------------------------------------
+
+class _FakeReplica:
+    """Enough of ``Replica`` for the router's routing/failure paths:
+    an inflight table plus a recording ``send``.  No process."""
+
+    def __init__(self, idx=0):
+        self.idx = idx
+        self.inflight = {}
+        self.healthy = True
+        self.stopped = False
+        self.probation = False
+        self.sent = []
+
+    def send(self, msg):
+        self.sent.append(msg)
+
+
+def _fake_router(replicas, **kw):
+    router = FleetRouter(tiny_engine, n_replicas=max(len(replicas), 1),
+                         **kw)
+    router.replicas = replicas
+    router.spill_slack = MAX_BATCH
+    router._started = True
+    return router
+
+
+def test_solo_death_at_budget_is_quarantined():
+    dead, survivor = _FakeReplica(0), _FakeReplica(1)
+    router = _fake_router([dead, survivor], retry_budget=2)
+    fut = Future()
+    # already implicated in one death; it was ALONE on this replica
+    dead.inflight[0] = (DiffusionRequest(request_id=9, seed=9), fut, 1)
+    dead.healthy = False
+    router._on_replica_down(dead)
+    with pytest.raises(PoisonRequestError):
+        fut.result(timeout=1)
+    assert router.counters["poison_quarantined"] == 1
+    assert not survivor.sent                 # never requeued
+
+
+def test_cohort_death_probes_instead_of_quarantining():
+    """A request at its budget that died in a COHORT is parked for a
+    solo isolation probe — a healthy bystander must never be failed on
+    circumstantial evidence."""
+    dead = _FakeReplica(0)
+    busy, idle = _FakeReplica(1), _FakeReplica(2)
+    router = _fake_router([dead, busy, idle], retry_budget=2)
+    sus_fut, fresh_fut = Future(), Future()
+    dead.inflight[0] = (DiffusionRequest(request_id=1, seed=1), sus_fut, 1)
+    dead.inflight[1] = (DiffusionRequest(request_id=2, seed=2), fresh_fut, 0)
+    router._on_replica_down(dead)
+
+    # under budget -> plain requeue; at budget in cohort -> probation
+    assert router.counters["probations"] == 1
+    assert router.counters["poison_quarantined"] == 0
+    assert not sus_fut.done() and not fresh_fut.done()
+    probed = busy if busy.probation else idle
+    other = idle if probed is busy else busy
+    assert probed.probation and len(probed.inflight) == 1
+    assert len(other.inflight) == 1          # the bystander requeue
+    # the probe comes back clean: bystander resolves, replica released
+    token = next(iter(probed.inflight))
+    router._finish(probed, token, value="ok")
+    assert sus_fut.result(timeout=1) == "ok"
+    assert not probed.probation
+
+
+def test_probation_replica_excluded_from_routing():
+    normal, probed = _FakeReplica(0), _FakeReplica(1)
+    probed.probation = True
+    router = _fake_router([normal, probed])
+    for req in _requests(4):
+        fut = router.submit(req)
+        assert not fut.done()
+    assert len(normal.inflight) == 4 and not probed.inflight
+
+
+def test_backpressure_blocks_until_capacity_frees():
+    rep = _FakeReplica(0)
+    router = _fake_router([rep], max_inflight=1)
+    router.submit(DiffusionRequest(request_id=0, seed=0))
+    assert len(rep.inflight) == 1
+
+    placed = threading.Event()
+
+    def second():
+        router.submit(DiffusionRequest(request_id=1, seed=1))
+        placed.set()
+
+    th = threading.Thread(target=second, daemon=True)
+    th.start()
+    assert not placed.wait(0.3)              # blocked at the cap
+    assert router.counters["backpressure_waits"] == 1
+    token = next(iter(rep.inflight))
+    router._finish(rep, token, value="done")  # frees the slot
+    assert placed.wait(5.0)
+    th.join(5.0)
+    assert len(rep.inflight) == 1
+    assert router.counters["peak_inflight"] == 1
+
+
+def test_backpressure_sheds_quality_once():
+    rep = _FakeReplica(0)
+    router = _fake_router([rep], max_inflight=1, shed_factor=4.0)
+    router.submit(DiffusionRequest(request_id=0, seed=0, max_error=0.1))
+
+    def second():
+        router.submit(DiffusionRequest(request_id=1, seed=1, max_error=0.1))
+
+    th = threading.Thread(target=second, daemon=True)
+    th.start()
+    deadline = time.monotonic() + 5.0
+    while router.counters["router_shed_events"] == 0 \
+            and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert router.counters["router_shed_events"] == 1
+    router._finish(rep, next(iter(rep.inflight)), value="done")
+    th.join(5.0)
+    (req, _, _), = rep.inflight.values()
+    assert req.max_error == pytest.approx(0.4)   # relaxed once, 0.1 * 4
+
+
+# ---------------------------------------------------------------------------
+# worker drain-thread dedupe (satellite) — worker_main run in a thread
+# ---------------------------------------------------------------------------
+
+class _FakeScheduler:
+    depth = 0
+
+
+class _FakeServeEngine:
+    max_batch = MAX_BATCH
+    buckets = [1, 2, 4]
+    scheduler = _FakeScheduler()
+
+    def warmup(self, buckets=None, lane_policy_sets=(), policies=()):
+        return 0.0
+
+    def metrics_dict(self):
+        return {"compile_misses": 0}
+
+
+def _fake_serve_engine():
+    return _FakeServeEngine()
+
+
+class _SlowDrainAsync:
+    """AsyncDiffusionEngine stand-in whose drain takes long enough to
+    overlap the router's 0.25 s drain re-sends."""
+    drains = 0
+
+    def __init__(self, engine):
+        self.engine = engine
+
+    def start(self):
+        return self
+
+    def pending(self):
+        return 0
+
+    def drain(self):
+        type(self).drains += 1
+        time.sleep(0.6)
+
+    def shutdown(self, drain=True):
+        pass
+
+
+def test_worker_coalesces_overlapping_drains(monkeypatch):
+    import repro.serving.async_engine as ae
+    monkeypatch.setattr(ae, "AsyncDiffusionEngine", _SlowDrainAsync)
+    _SlowDrainAsync.drains = 0
+    import multiprocessing as mp
+    parent, child = mp.Pipe()
+    payload = pickle.dumps((_fake_serve_engine, {}))
+    th = threading.Thread(target=worker_main,
+                          args=(child, {}, payload, None), daemon=True)
+    th.start()
+    try:
+        assert parent.poll(10.0)
+        assert parent.recv()[0] == "ready"
+        # the router re-sends ("drain",) every tick; the worker must
+        # run ONE flusher thread, not one per command
+        for _ in range(5):
+            parent.send(("drain",))
+            time.sleep(0.05)
+        flushers = [t for t in threading.enumerate()
+                    if t.name == "fleet-worker-drain" and t.is_alive()]
+        assert len(flushers) == 1, flushers
+        assert parent.poll(10.0)
+        assert parent.recv() == ("drained",)
+        assert _SlowDrainAsync.drains == 1   # 5 commands, one flush
+    finally:
+        parent.send(("stop",))
+        th.join(10.0)
+    assert not th.is_alive()
+
+
+# ---------------------------------------------------------------------------
+# boot-failure cleanup (satellite) — cheap: boot faults fire pre-import
+# ---------------------------------------------------------------------------
+
+def test_boot_error_is_killed_joined_and_closed():
+    router = FleetRouter(tiny_engine, n_replicas=1,
+                         fault_injector=FaultInjector().fail_boot())
+    with pytest.raises(RuntimeError, match="failed to boot"):
+        router.start()
+    (r,) = router.replicas
+    assert not r.proc.is_alive()             # killed AND joined, no zombie
+    assert r.proc.exitcode is not None
+    assert r.conn.closed                     # pipe fds released
+
+
+def test_boot_timeout_is_killed_joined_and_closed():
+    router = FleetRouter(tiny_engine, n_replicas=1, boot_timeout_s=1.0,
+                         fault_injector=FaultInjector().hang_boot(60.0))
+    with pytest.raises(TimeoutError):
+        router.start()
+    (r,) = router.replicas
+    assert not r.proc.is_alive()
+    assert r.conn.closed
+
+
+def test_replica_kill_is_latched():
+    r = Replica(0, tiny_engine, fault={"boot_hang_s": 60.0})
+    try:
+        assert r.kill() is True              # fires
+        assert r.kill() is False             # latched: at most once
+        assert r.kill_requested
+    finally:
+        r.destroy()
+    assert not r.proc.is_alive()
+    assert r.conn.closed
+
+
+# ---------------------------------------------------------------------------
+# integration: real workers under injected faults (slow)
+# ---------------------------------------------------------------------------
+
+def _wait(predicate, timeout_s, period=0.1):
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        if predicate():
+            return True
+        time.sleep(period)
+    return predicate()
+
+
+def test_killed_replica_restarts_and_serves_post_rejoin():
+    """The tentpole end-to-end: SIGKILL-equivalent crash mid-stream,
+    orphans requeued, slot restarted, and the restarted incarnation
+    serves a second wave with zero steady-state recompiles."""
+    n = 8
+    faults = FaultInjector().kill_after_submits(2, slot=0, start_n=0)
+    router = FleetRouter(tiny_engine, n_replicas=2, max_restarts=2,
+                         restart_backoff_base_s=0.1, max_inflight=16,
+                         health_interval_s=0.1, fault_injector=faults)
+    try:
+        router.start()
+        futs = [router.submit(r) for r in _requests(n)]
+        assert router.drain(timeout=300.0)
+        assert _wait(lambda: router.status()["healthy_replicas"] == 2,
+                     timeout_s=120.0)
+        futs += [router.submit(r) for r in _requests(n, start=n)]
+        assert router.drain(timeout=300.0)
+        outs = [f.result(timeout=10.0) for f in futs]   # exactly once
+        fm = router.fleet_metrics()
+        st = router.status()
+    finally:
+        router.shutdown(drain=False)
+
+    assert sorted(o.request_id for o in outs) == list(range(2 * n))
+    rt = st["counters"]
+    assert rt["replicas_lost"] >= 1 and rt["requeued"] >= 1
+    assert rt["submitted"] == rt["resolved"] == 2 * n
+    assert rt["failed"] == 0 and rt["poison_quarantined"] == 0
+    assert rt["peak_inflight"] <= 2 * 16
+    assert st["supervisor"]["restarts"] >= 1
+    assert st["replicas"][0]["start_n"] == 1    # the second incarnation
+    s = fm.summary()
+    # the restarted worker re-warmed at boot: serving stayed compile-free
+    for idx, pr in s["per_replica"].items():
+        assert pr["steady_recompiles"] == 0, (idx, pr)
+    assert s["per_replica"][0]["requests"] > 0  # rejoined AND served
+
+
+def test_hung_worker_killed_once_and_restarted():
+    """A worker that stops answering pings (but stays alive) must be
+    stale-pong killed exactly once — the latch satellite — and then
+    restarted by the supervisor."""
+    faults = FaultInjector().mute_pings_after(1, slot=0, start_n=0)
+    router = FleetRouter(tiny_engine, n_replicas=2, max_restarts=2,
+                         restart_backoff_base_s=0.1,
+                         health_interval_s=0.1, stale_after_s=1.0,
+                         fault_injector=faults)
+    try:
+        router.start()
+        assert _wait(
+            lambda: router.counters["stale_pong_kills"] >= 1
+            and router.status()["supervisor"]["restarts"] >= 1
+            and router.status()["healthy_replicas"] == 2,
+            timeout_s=120.0)
+        st = router.status()
+        # the monitor re-checks staleness every 0.1s tick while the EOF
+        # lands — without the latch this would count dozens of kills
+        assert st["counters"]["stale_pong_kills"] == 1
+        # and the router-side counter merges into the fleet wire format
+        assert router.fleet_metrics().merged().stale_pong_kills == 1
+    finally:
+        router.shutdown(drain=False)
+
+
+def test_restart_succeeds_after_one_boot_failure():
+    """Supervisor rides through an injected boot failure: the first
+    restart attempt dies at boot, the second serves — and the work
+    parked while nobody was healthy completes."""
+    faults = (FaultInjector()
+              .kill_after_submits(1, slot=0, start_n=0)
+              .fail_boot(slot=0, start_n=1))
+    router = FleetRouter(tiny_engine, n_replicas=1, max_restarts=3,
+                         restart_backoff_base_s=0.1,
+                         health_interval_s=0.1, fault_injector=faults)
+    try:
+        router.start()
+        futs = [router.submit(r) for r in _requests(2)]
+        outs = [f.result(timeout=300.0) for f in futs]
+        st = router.status()
+    finally:
+        router.shutdown(drain=False)
+    assert sorted(o.request_id for o in outs) == [0, 1]
+    sup = st["supervisor"]
+    assert sup["boot_failures"] >= 1
+    assert sup["restarts"] >= 1
+    assert sup["replicas_retired"] == 0
+    assert st["replicas"][0]["start_n"] == 2   # third incarnation serves
+
+
+def test_crash_loop_retires_slot_and_fails_parked_work():
+    """Every incarnation dies on its first submit: the slot must be
+    permanently retired after ``max_restarts`` and the unplaceable
+    request failed — not requeued forever."""
+    faults = FaultInjector().kill_after_submits(1, slot=0)  # every boot
+    router = FleetRouter(tiny_engine, n_replicas=1, max_restarts=1,
+                         retry_budget=10,     # keep quarantine out of it
+                         restart_backoff_base_s=0.1,
+                         health_interval_s=0.1, fault_injector=faults)
+    try:
+        router.start()
+        fut = router.submit(DiffusionRequest(request_id=0, seed=0))
+        with pytest.raises(RuntimeError, match="no recovery possible"):
+            fut.result(timeout=300.0)
+        assert _wait(lambda: router.status()["supervisor"][
+            "replicas_retired"] == 1, timeout_s=30.0)
+        st = router.status()
+    finally:
+        router.shutdown(drain=False)
+    assert st["healthy_replicas"] == 0
+    assert st["supervisor"]["retired_slots"] == [0]
+    assert st["counters"]["poison_quarantined"] == 0
+
+
+def test_poison_is_quarantined_healthy_traffic_unaffected():
+    """A request that kills every replica it reaches must end in
+    ``PoisonRequestError`` after its retry budget — while healthy
+    requests sharing the fleet (including its own crash cohorts) all
+    complete."""
+    poison_rid = 99
+    faults = FaultInjector().kill_on_request(poison_rid)   # all replicas
+    router = FleetRouter(tiny_engine, n_replicas=2, max_restarts=4,
+                         retry_budget=2, restart_backoff_base_s=0.1,
+                         health_interval_s=0.1, fault_injector=faults)
+    try:
+        router.start()
+        healthy = [router.submit(r) for r in _requests(6)]
+        poison = router.submit(
+            DiffusionRequest(request_id=poison_rid, seed=poison_rid))
+        with pytest.raises(PoisonRequestError):
+            poison.result(timeout=300.0)
+        outs = [f.result(timeout=300.0) for f in healthy]  # untouched
+        st = router.status()
+    finally:
+        router.shutdown(drain=False)
+    assert sorted(o.request_id for o in outs) == list(range(6))
+    rt = st["counters"]
+    assert rt["poison_quarantined"] == 1
+    assert rt["failed"] == 1                 # ONLY the poison request
+    assert rt["replicas_lost"] >= 2          # it killed more than one
+
+
+def test_sigkill_during_active_drain():
+    """A replica SIGKILLed while ``drain()`` is blocked mid-flush: the
+    drain must ride the requeue and still complete, every future
+    resolving exactly once."""
+    n = 12
+    router = FleetRouter(tiny_engine, n_replicas=2, health_interval_s=0.1)
+    try:
+        router.start()
+        futs = [router.submit(r) for r in _requests(n)]
+        with router._lock:
+            victim = max(router.replicas, key=lambda r: len(r.inflight))
+            assert victim.inflight
+
+        def killer():
+            time.sleep(0.3)                  # let drain() start waiting
+            victim.proc.kill()
+
+        th = threading.Thread(target=killer, daemon=True)
+        th.start()
+        assert router.drain(timeout=300.0)   # survives the mid-drain kill
+        th.join(5.0)
+        outs = [f.result(timeout=10.0) for f in futs]
+        st = router.status()
+    finally:
+        router.shutdown(drain=False)
+    assert sorted(o.request_id for o in outs) == list(range(n))
+    rt = st["counters"]
+    assert rt["resolved"] == n and rt["failed"] == 0
+    assert rt["duplicate_results"] == 0
