@@ -33,9 +33,9 @@ def main(argv=None) -> None:
 
     from benchmarks import (fig2_freq_analysis, fig4_crf_mse, figc1_ablation,
                             kernel_bench, roofline, serve_chaos, serve_fleet,
-                            serve_quality, serve_throughput, table1_flux,
-                            table2_qwen, table3_kontext, table4_qwen_edit,
-                            table5_memory)
+                            serve_multires, serve_quality, serve_throughput,
+                            table1_flux, table2_qwen, table3_kontext,
+                            table4_qwen_edit, table5_memory)
     csv = ["name,us_per_call,derived"]
 
     def headline(rows, pick="freqca(N=5)", metric="psnr"):
@@ -96,6 +96,11 @@ def main(argv=None) -> None:
                % svf[-1]["rps_vs_1replica"])
     svc = serve_chaos.run(n_requests=8 if args.smoke else 12)
     csv.append("serve_chaos,0,restarts=%s" % svc[-1]["restarts"])
+    svr = serve_multires.run(
+        n_requests=18 if args.smoke else 24,
+        max_batch=4 if args.smoke else 8)
+    csv.append("serve_multires,0,rps_vs_singles=%s"
+               % svr[1]["rps_vs_singles"])
     try:
         rl = roofline.run()
         csv.append("roofline,0,combos=%d" % len(rl))

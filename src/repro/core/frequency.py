@@ -30,7 +30,7 @@ class Bands(NamedTuple):
     high: jnp.ndarray
 
 
-@functools.lru_cache(maxsize=16)
+@functools.lru_cache(maxsize=None)
 def _dct_basis_np(n: int) -> np.ndarray:
     """Orthonormal DCT-II basis C with C @ C.T = I; rows = frequencies."""
     k = np.arange(n)[:, None].astype(np.float64)
@@ -104,7 +104,12 @@ def spectral_kept_bins(n: int, rho: float, method: Method) -> int:
     return kept_bins(n, rho, method)
 
 
-@functools.lru_cache(maxsize=16)
+# unbounded: a bounded cache (maxsize=16) silently evicted once more
+# than 16 (n, rho, method) combos were live — exactly the
+# multi-resolution serving regime — forcing repeated O(n^2) basis
+# rebuilds on the hot path.  The bases are tiny (m x n float64), so
+# keeping every combo for the process lifetime is the right trade.
+@functools.lru_cache(maxsize=None)
 def _low_band_basis_np(n: int, rho: float, method: Method) -> np.ndarray:
     """Real orthonormal basis ``B: [m, n]`` spanning the low band.
 

@@ -219,6 +219,15 @@ class Policy:
     def init(self, batch: int, feat_shape: Tuple[int, ...],
              crf_dtype=jnp.float32, latent_shape: Tuple[int, ...] = (),
              latent_dtype=jnp.float32):
+        """Build fresh per-batch cache state for one (batch, shape)
+        signature.  ``feat_shape`` is the per-sample CRF shape
+        ``(S, D)``: all derived quantities (spectral bands via
+        ``kept_bins(S, rho)``, ring sizes, masks) must be functions of
+        it, never of a config-global sequence length — a
+        multi-resolution engine calls ``init`` once per rung of its
+        shape ladder and each executable owns state sized for ITS
+        ``S``.  Policy objects therefore stay shape-free (hashable,
+        shared across every shape), and only the state is per-S."""
         raise NotImplementedError
 
     def decide(self, state, ctx: StepContext):

@@ -80,31 +80,49 @@ def psnr(a, b, data_range=2.0):
     return 10.0 * np.log10(data_range ** 2 / mse)
 
 
+def shape_ladder(cfg, sizes):
+    """The (latent [H, W, C], CRF [S, D]) shape pair per image size:
+    size ``s`` patchifies to ``(s / patch_size)^2`` tokens."""
+    return [((s, s, cfg.in_channels),
+             ((s // cfg.patch_size) ** 2, cfg.d_model)) for s in sizes]
+
+
 def _make_request(rid: int, size: int, channels: int, edit_every: int,
-                  policies=None, max_error=None) -> DiffusionRequest:
+                  policies=None, max_error=None,
+                  shapes=None) -> DiffusionRequest:
     pol = policies[rid % len(policies)] if policies else None
+    shape = shapes[rid % len(shapes)] if shapes else None
+    lat = shape[0] if shape else None
+    crf = shape[1] if shape else None
+    if shape is not None:
+        size = shape[0][0]    # edit refs must match the declared latent
     if edit_every and rid % edit_every == edit_every - 1:
         ref = synthetic.shapes_batch(jax.random.key(1000 + rid), 1,
                                      size=size, channels=channels)[0]
         return DiffusionRequest(request_id=rid, seed=rid, init_latents=ref,
                                 edit_strength=0.5, policy=pol,
-                                max_error=max_error)
+                                max_error=max_error,
+                                latent_shape=lat, crf_shape=crf)
     return DiffusionRequest(request_id=rid, seed=rid, policy=pol,
-                            max_error=max_error)
+                            max_error=max_error,
+                            latent_shape=lat, crf_shape=crf)
 
 
 def mixed_stream(n_requests: int, size: int, channels: int,
-                 edit_every: int = 5, policies=None, max_error=None):
+                 edit_every: int = 5, policies=None, max_error=None,
+                 shapes=None):
     """Deterministic mixed request stream: bursts of varying size, every
     ``edit_every``-th request an editing request from a synthetic ref;
-    optional per-request cache policies assigned round-robin."""
+    optional per-request cache policies (and multi-resolution shape
+    pairs) assigned round-robin."""
     reqs, rid = [], 0
     burst_sizes = itertools.cycle([1, 3, 8, 2, 4, 1])
     while rid < n_requests:
         burst = []
         for _ in range(min(next(burst_sizes), n_requests - rid)):
             burst.append(_make_request(rid, size, channels, edit_every,
-                                       policies, max_error=max_error))
+                                       policies, max_error=max_error,
+                                       shapes=shapes))
             rid += 1
         reqs.append(burst)
     return reqs
@@ -112,12 +130,13 @@ def mixed_stream(n_requests: int, size: int, channels: int,
 
 def poisson_stream(n_requests: int, rate: float, size: int, channels: int,
                    edit_every: int = 5, policies=None, seed: int = 0,
-                   max_error=None):
+                   max_error=None, shapes=None):
     """Open-loop arrival plan: a flat list of ``DiffusionRequest`` with
     exponential inter-arrival times at ``rate`` req/s stamped into each
     request's ``arrival_s`` (deterministic for a given ``seed``) — the
     unified request object carries its own arrival, no side-channel
-    tuples."""
+    tuples.  ``shapes`` cycles multi-resolution shape pairs round-robin
+    so a mixed 256/512/1024-token stream is one flag away."""
     if rate <= 0:
         raise ValueError(f"rate must be > 0, got {rate}")
     rng = np.random.RandomState(seed)
@@ -125,7 +144,7 @@ def poisson_stream(n_requests: int, rate: float, size: int, channels: int,
     for rid in range(n_requests):
         t += float(rng.exponential(1.0 / rate))
         req = _make_request(rid, size, channels, edit_every, policies,
-                            max_error=max_error)
+                            max_error=max_error, shapes=shapes)
         req.arrival_s = t
         plan.append(req)
     return plan
@@ -254,13 +273,16 @@ def _stream_policies(args, default_pol):
 def fleet_engine_factory(params_np, cfg_name: str, size: int, steps: int,
                          batch: int, max_wait: float, method: str,
                          interval: int, max_error, grouped: bool,
-                         shed_depth, shed_factor: float):
+                         shed_depth, shed_factor: float, sizes=None):
     """Zero-arg-able engine builder for fleet workers.
 
     Module-level (so ``functools.partial`` of it pickles under the
     spawn start method) and takes params as a *numpy* pytree — the
     child converts to device arrays after its own jax init, so the
     parent's device state never crosses the process boundary.
+    ``sizes`` declares a multi-resolution shape ladder (image sizes;
+    ``size`` stays the primary) — every replica then warms and serves
+    the full ladder.
     """
     cfg = config_lib.get_config(cfg_name)
     params = jax.tree_util.tree_map(jnp.asarray, params_np)
@@ -272,8 +294,11 @@ def fleet_engine_factory(params_np, cfg_name: str, size: int, steps: int,
         return out.velocity, out.crf
 
     def from_crf_fn(crf, t):
+        # shape-generic decode: the image side is recovered from the
+        # token count, so one callable serves the whole shape ladder
         tb = jnp.full((crf.shape[0],), t)
-        return dit.dit_from_crf(params, crf, tb, cfg, size, size)
+        side = int(round(crf.shape[1] ** 0.5)) * cfg.patch_size
+        return dit.dit_from_crf(params, crf, tb, cfg, side, side)
 
     if max_error is not None:
         pol = policy_lib.FreqCaErrorBudgetPolicy(
@@ -285,7 +310,8 @@ def fleet_engine_factory(params_np, cfg_name: str, size: int, steps: int,
                            (n_tokens, cfg.d_model), pol,
                            n_steps=steps, max_batch=batch,
                            max_wait_s=max_wait, group_policies=grouped,
-                           shed_depth=shed_depth, shed_factor=shed_factor)
+                           shed_depth=shed_depth, shed_factor=shed_factor,
+                           shapes=shape_ladder(cfg, sizes or ()))
 
 
 def serve_fleet_open_loop(router, plan, clients: int = 4):
@@ -318,6 +344,16 @@ def serve_fleet_open_loop(router, plan, clients: int = 4):
     return outs, wall
 
 
+def _parse_sizes(args, primary: int):
+    """The image-size ladder from ``--sizes`` (primary first, deduped)."""
+    sizes = [primary]
+    for tok in (getattr(args, "sizes", "") or "").split(","):
+        tok = tok.strip()
+        if tok and int(tok) not in sizes:
+            sizes.append(int(tok))
+    return sizes
+
+
 def serve_fleet_main(args, params, size: int, channels: int):
     """The ``--replicas N`` (N > 1) serving path: ship the trained
     params to N worker processes, route the stream through the fleet
@@ -329,20 +365,24 @@ def serve_fleet_main(args, params, size: int, channels: int):
     if args.max_error is not None and args.shed_depth is not None:
         extra.append(default_pol.with_budget(
             args.max_error * args.shed_factor))
+    cfg = config_lib.get_config("dit-small")
+    sizes = _parse_sizes(args, size)
+    shapes = shape_ladder(cfg, sizes) if len(sizes) > 1 else None
     params_np = jax.tree_util.tree_map(np.asarray, params)
     factory = functools.partial(
         fleet_engine_factory, params_np, "dit-small", size, args.steps,
         args.batch, args.max_wait, args.method, args.interval,
         args.max_error, not args.ungrouped, args.shed_depth,
-        args.shed_factor)
+        args.shed_factor, sizes=sizes if len(sizes) > 1 else None)
     if args.arrival == "poisson":
         plan = poisson_stream(args.requests, args.rate, size, channels,
                               edit_every=args.edit_every, policies=pols,
-                              max_error=args.max_error)
+                              max_error=args.max_error, shapes=shapes)
     else:
         plan = [r for burst in mixed_stream(
             args.requests, size, channels, edit_every=args.edit_every,
-            policies=pols, max_error=args.max_error) for r in burst]
+            policies=pols, max_error=args.max_error,
+            shapes=shapes) for r in burst]
         for r in plan:
             r.arrival_s = 0.0
     router = FleetRouter(factory, n_replicas=args.replicas,
@@ -443,6 +483,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--max-inflight", type=int, default=0,
                     help="outstanding requests per replica before "
                          "submit() backpressures (0 = unbounded)")
+    ap.add_argument("--sizes", default="",
+                    help="comma-separated extra image sizes to serve "
+                         "alongside the primary (multi-resolution shape "
+                         "ladder, e.g. --sizes 16,64: requests cycle "
+                         "sizes round-robin, every cut is shape-pure, "
+                         "executables stay <= shapes x groups x buckets)")
     return ap
 
 
@@ -461,6 +507,8 @@ def main():
         serve_fleet_main(args, params, size, cfg.in_channels)
         return
     n_tokens = (size // cfg.patch_size) ** 2
+    sizes = _parse_sizes(args, size)
+    shapes = shape_ladder(cfg, sizes) if len(sizes) > 1 else None
 
     def full_fn(x, t):
         tb = jnp.full((x.shape[0],), t)
@@ -468,8 +516,11 @@ def main():
         return out.velocity, out.crf
 
     def from_crf_fn(crf, t):
+        # shape-generic: recover the image side from the token count so
+        # one callable decodes every ladder entry
         tb = jnp.full((crf.shape[0],), t)
-        return dit.dit_from_crf(params, crf, tb, cfg, size, size)
+        side = int(round(crf.shape[1] ** 0.5)) * cfg.patch_size
+        return dit.dit_from_crf(params, crf, tb, cfg, side, side)
 
     def engine(policy):
         return DiffusionEngine(full_fn, from_crf_fn,
@@ -479,7 +530,8 @@ def main():
                                max_wait_s=args.max_wait,
                                group_policies=not args.ungrouped,
                                shed_depth=args.shed_depth,
-                               shed_factor=args.shed_factor)
+                               shed_factor=args.shed_factor,
+                               shapes=shapes or ())
 
     default_pol = _default_policy(args)
     policies = _stream_policies(args, default_pol)
@@ -514,7 +566,7 @@ def main():
             plan = poisson_stream(args.requests, args.rate, size,
                                   cfg.in_channels,
                                   edit_every=args.edit_every, policies=pols,
-                                  max_error=max_err)
+                                  max_error=max_err, shapes=shapes)
             if args.clients > 0:
                 outs, wall = serve_threaded_open_loop(eng, plan,
                                                       clients=args.clients)
@@ -523,7 +575,7 @@ def main():
         else:
             bursts = mixed_stream(args.requests, size, cfg.in_channels,
                                   edit_every=args.edit_every, policies=pols,
-                                  max_error=max_err)
+                                  max_error=max_err, shapes=shapes)
             outs, wall = serve_stream(eng, bursts)
         outs.sort(key=lambda o: o.request_id)
         results[name] = (outs, wall)
@@ -557,6 +609,11 @@ def main():
                       f"{g['mean_occupancy']:.2f}"
                       + (f", budget events {g['budget_events']}"
                          if g["budget_events"] else ""))
+        if s.get("shape_keys", 0) > 1:
+            for key, sh in s["per_shape"].items():
+                print(f"          shape {key}: {sh['requests']} reqs in "
+                      f"{sh['batches']} batches, occupancy "
+                      f"{sh['mean_occupancy']:.2f}")
 
     f_outs, f_wall = results["freqca"]
     u_outs, u_wall = results["full"]

@@ -94,9 +94,10 @@ class AsyncDiffusionEngine:
 
     def warmup(self, buckets: Optional[Sequence[int]] = None,
                lane_policy_sets: Sequence[Sequence[object]] = (),
-               policies: Sequence[object] = ()) -> float:
+               policies: Sequence[object] = (),
+               shapes: Sequence = ()) -> float:
         return self.engine.warmup(buckets, lane_policy_sets,
-                                  policies=policies)
+                                  policies=policies, shapes=shapes)
 
     def metrics_dict(self):
         """Fleet-export hook: lossless snapshot of the shared metrics."""
@@ -120,8 +121,13 @@ class AsyncDiffusionEngine:
                     "DiffusionRequest per attempt")
             if self._worker is None:
                 self.start()
-            self._futures[id(req)] = fut
+            # submit BEFORE registering the future: scheduler.submit
+            # validates shapes and may raise (ShapeMismatchError) — the
+            # future map must not keep an entry for a rejected request.
+            # Safe under the reentrant cv: the worker can't observe the
+            # queued-but-unregistered state until we release the lock.
             self.scheduler.submit(req, now=now)   # notifies the worker
+            self._futures[id(req)] = fut
         return fut
 
     def pending(self) -> int:

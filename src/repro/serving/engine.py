@@ -77,7 +77,8 @@ class DiffusionEngine:
                  pad_to_max: bool = False, mesh=None,
                  group_policies: bool = True,
                  shed_depth: Optional[int] = None,
-                 shed_factor: float = 4.0):
+                 shed_factor: float = 4.0,
+                 shapes: Sequence = ()):
         self.full_fn = full_fn
         self.from_crf_fn = from_crf_fn
         self.latent_shape = tuple(latent_shape)      # [H, W, C]
@@ -88,31 +89,61 @@ class DiffusionEngine:
         self.crf_dtype = crf_dtype
         self.mesh = mesh
         self.group_policies = group_policies
+        # multi-resolution shape ladder: (latent_shape, crf_shape)
+        # pairs this deployment serves.  The default is always first;
+        # ``shapes`` adds more at construction, ``warmup(shapes=[...])``
+        # at warmup.  ``_allowed_shapes`` is shared by reference with
+        # the scheduler, so submit-time validation tracks declarations.
+        self.default_shape = (self.latent_shape, self.crf_shape)
+        self.shapes: List = [self.default_shape]
+        self._allowed_shapes = {self.default_shape}
+        for pair in shapes:
+            self.declare_shape(*pair)
         self.scheduler = Scheduler(max_batch=max_batch,
                                    max_wait_s=max_wait_s,
                                    pad_to_max=pad_to_max,
                                    group_policies=group_policies,
                                    default_policy=policy,
                                    shed_depth=shed_depth,
-                                   shed_factor=shed_factor)
+                                   shed_factor=shed_factor,
+                                   default_shape=self.default_shape,
+                                   allowed_shapes=self._allowed_shapes)
         self.metrics = ServeMetrics()
         self._ts = schedule.timesteps(n_steps)
 
-        def run(x_init, lane_policies):
-            # batch size and the per-lane policy signature are static at
-            # trace time -> one executable per (bucket, policies) pair,
-            # cached for the process lifetime
+        def run(x_init, lane_policies, crf_feat):
+            # batch size, the per-lane policy signature, and the
+            # per-sample CRF shape are static at trace time -> one
+            # executable per (shape, group, bucket) triple, cached for
+            # the process lifetime
             batch = x_init.shape[0]
             res = sampler_lib.sample(
                 self.full_fn, self.from_crf_fn, x_init, self._ts,
-                lane_policies, crf_shape=(batch,) + self.crf_shape,
+                lane_policies, crf_shape=(batch,) + tuple(crf_feat),
                 crf_dtype=self.crf_dtype)
             # feedback is None (an empty pytree) unless some lane's
             # policy consumes error observations, so non-SLO signatures
             # stay byte-identical programs
             return res.x, res.n_full, res.n_full_lanes, res.feedback
 
-        self._jit_run = jax.jit(run, static_argnums=1, donate_argnums=0)
+        self._jit_run = jax.jit(run, static_argnums=(1, 2),
+                                donate_argnums=0)
+
+    def declare_shape(self, latent_shape, crf_shape) -> tuple:
+        """Add a (latent, CRF) shape pair to the deployment's ladder so
+        submits carrying it validate; warm it (``warmup``) before
+        steady-state traffic to keep serving compile-free."""
+        key = (tuple(latent_shape), tuple(crf_shape))
+        if key not in self._allowed_shapes:
+            self.shapes.append(key)
+            self._allowed_shapes.add(key)
+        return key
+
+    @staticmethod
+    def _shape_label(latent_shape, crf_shape) -> str:
+        """Compact per-shape metrics key, e.g. ``lat32x32x4/crf256x128``."""
+        return ("lat" + "x".join(str(d) for d in latent_shape)
+                + "/crf" + "x".join(str(d) for d in crf_shape))
 
     @staticmethod
     def _normalize_signature(lanes):
@@ -123,18 +154,23 @@ class DiffusionEngine:
             return lanes[0]
         return lanes
 
-    def state_bytes(self, batch: int = 1) -> int:
+    def state_bytes(self, batch: int = 1, latent_shape=None,
+                    crf_shape=None) -> int:
         """Real cache-state footprint of the engine policy for a
         ``batch``-lane bucket — the number Table-5/``ServeMetrics``
         report.  With the spectral FreqCa cache the low ring holds
         ``m = kept_bins(S, rho)`` coefficient rows instead of S spatial
         rows, so this is ~``rho`` of the spatial figure for the low
-        band."""
+        band.  ``latent_shape``/``crf_shape`` select a ladder entry
+        (default: the engine's primary shape) — the per-S spectral
+        state means each shape has its own footprint."""
         from repro.core.policies import registry as policy_registry
         pol = policy_registry.resolve(self.policy)
+        lat = tuple(latent_shape) if latent_shape else self.latent_shape
+        crf = tuple(crf_shape) if crf_shape else self.crf_shape
         state = jax.eval_shape(
-            lambda: pol.init(batch, self.crf_shape, self.crf_dtype,
-                             latent_shape=self.latent_shape,
+            lambda: pol.init(batch, crf, self.crf_dtype,
+                             latent_shape=lat,
                              latent_dtype=jnp.float32))
         # the policy's own accounting hook (works on the eval_shape
         # pytree: ShapeDtypeStruct carries .size and .dtype)
@@ -160,9 +196,16 @@ class DiffusionEngine:
             # compile accounting degrades to all-hits
             return -1
 
+    def signature_budget(self, n_groups: int = 1) -> int:
+        """Upper bound on compiled signatures for steady-state traffic:
+        ``shapes x groups x buckets`` (the multi-resolution invariant
+        the bench guard asserts)."""
+        return len(self.shapes) * max(n_groups, 1) * len(self.buckets)
+
     def warmup(self, buckets: Optional[Sequence[int]] = None,
                lane_policy_sets: Sequence[Sequence[object]] = (),
-               policies: Sequence[object] = ()) -> float:
+               policies: Sequence[object] = (),
+               shapes: Sequence = ()) -> float:
         """Precompile sampler executables for every bucket signature on
         the default policy, plus any extra per-lane policy signatures
         (``lane_policy_sets``: each entry is a full per-lane assignment
@@ -178,12 +221,25 @@ class DiffusionEngine:
         canonicalizes lane order so interleavings collapse — cached for
         the process lifetime; pre-warm those with ``lane_policy_sets``.
 
+        ``shapes`` — extra (latent_shape, crf_shape) pairs to declare
+        (they join the ladder, so submits carrying them validate) and
+        warm.  Every warmed (bucket, policy-signature) pair is compiled
+        once per declared shape: the multi-resolution executable count
+        is exactly ``shapes x groups x buckets``
+        (``signature_budget``), and a mixed-resolution stream then
+        serves with zero steady-state recompiles.
+
         Returns wall seconds spent.  After warmup, serving any mix of
-        batch sizes — and any warmed policy mix — hits the jit cache:
-        zero steady-state recompiles.
+        batch sizes — and any warmed policy mix, at any declared shape
+        — hits the jit cache: zero steady-state recompiles.
         """
         t0 = time.perf_counter()
-        self.metrics.observe_state_bytes(self.state_bytes(batch=1))
+        for pair in shapes:
+            self.declare_shape(*pair)
+        for lat, crf in self.shapes:
+            self.metrics.observe_state_bytes(
+                self.state_bytes(batch=1, latent_shape=lat, crf_shape=crf),
+                shape_key=self._shape_label(lat, crf))
         sigs = [(b, self.policy) for b in (buckets or self.buckets)]
         for pol in policies:
             sigs.extend((b, pol) for b in self.buckets
@@ -194,13 +250,14 @@ class DiffusionEngine:
                 raise ValueError(f"lane policy set of length {len(lanes)} "
                                  f"matches no bucket in {self.buckets}")
             sigs.append((len(lanes), self._normalize_signature(lanes)))
-        for b, sig in sigs:
-            x = self._place(jnp.zeros((b,) + self.latent_shape))
-            cache_before = self.compiled_buckets()
-            out = self._jit_run(x, sig)[0]
-            out.block_until_ready()
-            self.metrics.observe_compile(
-                hit=self.compiled_buckets() == cache_before)
+        for lat, crf in self.shapes:
+            for b, sig in sigs:
+                x = self._place(jnp.zeros((b,) + lat))
+                cache_before = self.compiled_buckets()
+                out = self._jit_run(x, sig, crf)[0]
+                out.block_until_ready()
+                self.metrics.observe_compile(
+                    hit=self.compiled_buckets() == cache_before)
         self.metrics.observe_compiled_signatures(self.compiled_buckets())
         return time.perf_counter() - t0
 
@@ -210,12 +267,14 @@ class DiffusionEngine:
         self.scheduler.submit(req, now=now)
 
     def build_x_init(self, plan: BatchPlan) -> jnp.ndarray:
-        """[bucket, H, W, C] noise batch; editing lanes partially noised,
-        padded lanes zero."""
+        """[bucket, H, W, C] noise batch at the plan's latent shape;
+        editing lanes partially noised, padded lanes zero.  Cuts are
+        shape-pure, so one shape covers every lane."""
+        lat = (tuple(plan.latent_shape) if plan.latent_shape is not None
+               else self.latent_shape)
         lanes = []
         for r in plan.requests:
-            noise = jax.random.normal(jax.random.key(r.seed),
-                                      self.latent_shape)
+            noise = jax.random.normal(jax.random.key(r.seed), lat)
             if r.init_latents is not None:
                 # image editing: start from a partially noised reference
                 ref = jnp.asarray(r.init_latents, noise.dtype)
@@ -223,7 +282,7 @@ class DiffusionEngine:
                                                 r.edit_strength))
             else:
                 lanes.append(noise)
-        lanes += [jnp.zeros(self.latent_shape)] * (plan.bucket - plan.n_real)
+        lanes += [jnp.zeros(lat)] * (plan.bucket - plan.n_real)
         return jnp.stack(lanes)
 
     def _place(self, x: jnp.ndarray) -> jnp.ndarray:
@@ -241,6 +300,10 @@ class DiffusionEngine:
         engine guarantees this by owning a single worker)."""
         x_init = self._place(self.build_x_init(plan))
         sig = self._normalize_signature(plan.lane_policies(self.policy))
+        crf = (tuple(plan.crf_shape) if plan.crf_shape is not None
+               else self.crf_shape)
+        lat = (tuple(plan.latent_shape) if plan.latent_shape is not None
+               else self.latent_shape)
         if sanitize.enabled():
             # a tracer stashed on a policy object would poison the jit
             # cache key (new signature every batch -> recompiles) or
@@ -248,7 +311,7 @@ class DiffusionEngine:
             sanitize.check_tracer_leaks(sig, "policy signature")
         cache_before = self.compiled_buckets()
         t0 = time.perf_counter()
-        x, n_forwards, lane_full, feedback = self._jit_run(x_init, sig)
+        x, n_forwards, lane_full, feedback = self._jit_run(x_init, sig, crf)
         x.block_until_ready()
         wall = time.perf_counter() - t0
         lane_err = lane_ev = None
@@ -262,7 +325,8 @@ class DiffusionEngine:
             plan.bucket, plan.n_real, wall, int(n_forwards), self.n_steps,
             lane_full=[int(v) for v in lane_full[:plan.n_real]],
             group_key=plan.group_key,
-            lane_errors=lane_err, lane_events=lane_ev)
+            lane_errors=lane_err, lane_events=lane_ev,
+            shape_key=self._shape_label(lat, crf))
         self.metrics.observe_shed_events(self.scheduler.shed_events)
         out = []
         for i, r in enumerate(plan.requests):   # padded lanes never leak

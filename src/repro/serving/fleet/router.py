@@ -78,9 +78,11 @@ from typing import Dict, List, Optional
 from repro.analysis.runtime import make_condition, make_lock
 from repro.serving.fleet.fleet_metrics import FleetMetrics
 from repro.serving.fleet.worker import Replica
-from repro.serving.scheduler import DiffusionRequest
+from repro.serving.scheduler import (DiffusionRequest, ShapeMismatchError,
+                                     resolve_shape_key,
+                                     validate_request_shape)
 
-__all__ = ["FleetRouter", "PoisonRequestError"]
+__all__ = ["FleetRouter", "PoisonRequestError", "ShapeMismatchError"]
 
 
 class PoisonRequestError(RuntimeError):
@@ -163,7 +165,13 @@ class FleetRouter:
         self._lock = make_lock("FleetRouter._lock")
         self._cv = make_condition("FleetRouter._cv", lock=self._lock)
         self._home: Dict = {}         # affinity key -> replica idx
-        self._key_cache: Dict = {}    # (policy, max_error) -> affinity key
+        self._key_cache: Dict = {}    # (policy, budget, shapes) -> key
+        # shape ladder shared by the replicas (all run the same factory
+        # + warm spec): learned from the first replica's ready metadata,
+        # used to validate submits at the router boundary and to fold
+        # shape into affinity keys.  None with pre-multires workers.
+        self._default_shape = None
+        self._shape_ladder = None
         self._starts: Dict[int, int] = {}   # slot idx -> spawn count
         self._parked: List[list] = []  # [req, fut, deaths, probe_flag]
         self._next_token = 0
@@ -225,6 +233,13 @@ class FleetRouter:
         if self.spill_slack is None:
             self.spill_slack = max(r.meta.get("max_batch", 1)
                                    for r in self.replicas)
+        meta0 = self.replicas[0].meta
+        if meta0.get("shapes"):
+            self._shape_ladder = {
+                (tuple(s[0]), tuple(s[1])) for s in meta0["shapes"]}
+        if meta0.get("default_shape"):
+            ds = meta0["default_shape"]
+            self._default_shape = (tuple(ds[0]), tuple(ds[1]))
         for r in self.replicas:
             self._start_recv(r)
         mon = threading.Thread(target=self._monitor, name="fleet-monitor",
@@ -256,18 +271,27 @@ class FleetRouter:
 
     # --- routing ---------------------------------------------------------
     def _affinity_key(self, req: DiffusionRequest):
-        """The compatibility-group key the replica's scheduler will file
-        this request under: resolved policy, budget tier folded in."""
+        """The cut key the replica's scheduler will file this request
+        under: (resolved policy with budget tier folded in, canonical
+        shape key) — mirroring ``Scheduler._cut_key``, so a
+        (policy, shape) group piles onto ONE replica and fills
+        shape-pure buckets fleet-wide."""
         pol = req.policy if req.policy is not None else self.default_policy
-        ck = (pol, req.max_error)
+        lat = (tuple(req.latent_shape)
+               if req.latent_shape is not None else None)
+        crf = tuple(req.crf_shape) if req.crf_shape is not None else None
+        ck = (pol, req.max_error, lat, crf)
         key = self._key_cache.get(ck)
         if key is None:
             if pol is None:
-                key = ("default", req.max_error)
+                pkey = ("default", req.max_error)
             else:
                 from repro.core.policies import registry
-                key = registry.compatibility_key(
+                pkey = registry.compatibility_key(
                     registry.resolve(pol).with_budget(req.max_error))
+            shape = resolve_shape_key(lat, crf, self._default_shape,
+                                      self._shape_ladder)
+            key = (pkey, shape)
             self._key_cache[ck] = key
         return key
 
@@ -308,17 +332,33 @@ class FleetRouter:
         if total > self.counters["peak_inflight"]:
             self.counters["peak_inflight"] = total
 
+    def _validate_shape(self, req: DiffusionRequest) -> None:
+        """Fail fast at the router boundary: a request whose declared
+        shape is outside the fleet's ladder raises
+        :class:`ShapeMismatchError` synchronously — before ``submitted``
+        is counted, so ``submitted == resolved + failed`` holds without
+        a round-trip to a replica (whose own scheduler would reject it
+        anyway, but only after pickling + a pipe hop).  Skipped when the
+        workers predate shape metadata."""
+        if self._shape_ladder is None and self._default_shape is None:
+            return
+        validate_request_shape(req, self._default_shape,
+                               self._shape_ladder)
+
     # --- submit path -----------------------------------------------------
     def submit(self, req: DiffusionRequest) -> Future:
         """Thread-safe; the future resolves to this request's
         ``DiffusionResult`` from whichever replica serves it (survivors
         included, if its first home dies mid-flight).  Blocks while
         every healthy replica is at ``max_inflight`` (after shedding
-        quality once, if ``shed_factor`` is set)."""
+        quality once, if ``shed_factor`` is set).  Raises
+        ``ShapeMismatchError`` for shapes outside the fleet's declared
+        ladder — synchronously, before the request is counted."""
         fut: Future = Future()
         with self._cv:
             if not self._started:
                 raise RuntimeError("router not started; call start()")
+            self._validate_shape(req)
             blocked = shed = False
             while True:
                 if self._stopping:

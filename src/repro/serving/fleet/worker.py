@@ -95,7 +95,9 @@ def worker_main(conn, env: dict, payload: bytes, fault=None) -> None:
         warm_s = engine.warmup(
             buckets=warm.get("buckets"),
             lane_policy_sets=warm.get("lane_policy_sets", ()),
-            policies=warm.get("policies", ()))
+            policies=warm.get("policies", ()),
+            shapes=[tuple(map(tuple, s))
+                    for s in warm.get("shapes", ())])
         warm_compiles = engine.metrics_dict()["compile_misses"]
         from repro.serving.async_engine import AsyncDiffusionEngine
         aeng = AsyncDiffusionEngine(engine).start()
@@ -139,6 +141,11 @@ def worker_main(conn, env: dict, payload: bytes, fault=None) -> None:
         "warmup_compiles": warm_compiles,
         "max_batch": engine.max_batch,
         "buckets": list(engine.buckets),
+        # shape ladder: lists (not tuples) so the wire dict stays plain;
+        # the router re-tuples before validating submits against it
+        "shapes": [[list(lat), list(crf)] for lat, crf in engine.shapes],
+        "default_shape": [list(engine.latent_shape),
+                          list(engine.crf_shape)],
     }))
 
     kill_after_submits = int(fault.get("kill_after_submits") or 0)

@@ -117,6 +117,13 @@ class ServeMetrics:
     # per compatibility group:
     # [n_batches, n_requests, occupancy_sum, budget_events, errors]
     group_batches: Dict = dataclasses.field(default_factory=dict)
+    # multi-resolution serving: per shape-key accounting
+    # [n_batches, n_requests, occupancy_sum] — every batch is cut
+    # shape-pure, so one key covers all its lanes
+    shape_batches: Dict = dataclasses.field(default_factory=dict)
+    # per-shape cache-state footprint (bytes/lane), set at warmup;
+    # ``cache_state_bytes_per_lane`` stays the ladder maximum
+    state_bytes_by_shape: Dict = dataclasses.field(default_factory=dict)
     _lock: threading.Lock = dataclasses.field(
         default_factory=_metrics_lock, repr=False, compare=False)
 
@@ -138,10 +145,19 @@ class ServeMetrics:
             if self.time_to_first_result_s is None:
                 self.time_to_first_result_s = float(elapsed_s)
 
-    def observe_state_bytes(self, nbytes: int) -> None:
-        """Record the engine policy's real per-lane cache footprint."""
+    def observe_state_bytes(self, nbytes: int,
+                            shape_key: Optional[str] = None) -> None:
+        """Record the engine policy's real per-lane cache footprint.
+        With a ``shape_key`` the figure is also kept per ladder entry,
+        and the scalar becomes the ladder maximum (the provisioning
+        number for a multi-resolution deployment)."""
         with self._lock:
-            self.cache_state_bytes_per_lane = int(nbytes)
+            if shape_key is not None:
+                self.state_bytes_by_shape[str(shape_key)] = int(nbytes)
+                self.cache_state_bytes_per_lane = max(
+                    self.cache_state_bytes_per_lane or 0, int(nbytes))
+            else:
+                self.cache_state_bytes_per_lane = int(nbytes)
 
     def observe_compiled_signatures(self, n: int) -> None:
         """Record the engine's jit-cache probe (distinct compiled
@@ -170,14 +186,23 @@ class ServeMetrics:
                       lane_full: Optional[List[int]] = None,
                       group_key=None,
                       lane_errors: Optional[List[float]] = None,
-                      lane_events: Optional[List[int]] = None) -> None:
+                      lane_events: Optional[List[int]] = None,
+                      shape_key: Optional[str] = None) -> None:
         """``n_forwards`` — batch forwards actually run (compute);
         ``lane_full`` — per-real-lane activated-step counts (quality);
         ``group_key`` — the compatibility group this batch was cut from
         (None under the ungrouped former); ``lane_errors`` /
         ``lane_events`` — per-real-lane realized error and
-        budget-triggered full counts from error-feedback policies."""
+        budget-triggered full counts from error-feedback policies;
+        ``shape_key`` — the (latent, CRF) shape label of this
+        (shape-pure) batch for per-resolution accounting."""
         with self._lock:
+            if shape_key is not None:
+                sb = self.shape_batches.setdefault(str(shape_key),
+                                                   [0, 0, 0.0])
+                sb[0] += 1
+                sb[1] += int(n_real)
+                sb[2] += n_real / max(bucket, 1)
             if group_key is not None:
                 g = self.group_batches.setdefault(str(group_key),
                                                   [0, 0, 0.0, 0, []])
@@ -253,6 +278,12 @@ class ServeMetrics:
                     "realized_error_p95": (round(percentile(g[4], 95), 6)
                                            if g[4] else None)}
                 for k, g in self.group_batches.items()}
+            per_shape = {
+                k: {"batches": s[0], "requests": s[1],
+                    "mean_occupancy": round(s[2] / max(s[0], 1), 3),
+                    "state_bytes_per_lane":
+                        self.state_bytes_by_shape.get(k)}
+                for k, s in self.shape_batches.items()}
         return {
             "requests": len(lats),
             "batches": len(walls),
@@ -280,6 +311,8 @@ class ServeMetrics:
             "compiled_signatures": signatures,
             "policy_groups": len(per_group),
             "per_group": per_group,
+            "shape_keys": len(per_shape),
+            "per_shape": per_shape,
             "max_queue_depth": max(depths, default=0),
             "time_to_first_result_s": (None if ttfr is None
                                        else round(ttfr, 4)),
@@ -302,6 +335,9 @@ class ServeMetrics:
                 queue_depths=list(self.queue_depths),
                 group_batches={k: v[:4] + [list(v[4])]
                                for k, v in self.group_batches.items()},
+                shape_batches={k: list(v)
+                               for k, v in self.shape_batches.items()},
+                state_bytes_by_shape=dict(self.state_bytes_by_shape),
                 _lock=_metrics_lock(),
             )
 
@@ -317,6 +353,9 @@ class ServeMetrics:
             d.update({f: getattr(self, f) for f in _OPTIONAL_FIELDS})
             d["group_batches"] = {k: v[:4] + [list(v[4])]
                                   for k, v in self.group_batches.items()}
+            d["shape_batches"] = {k: list(v)
+                                  for k, v in self.shape_batches.items()}
+            d["state_bytes_by_shape"] = dict(self.state_bytes_by_shape)
         return d
 
     @classmethod
@@ -335,6 +374,10 @@ class ServeMetrics:
             setattr(m, f, d.get(f))
         m.group_batches = {k: v[:4] + [list(v[4])]
                            for k, v in d.get("group_batches", {}).items()}
+        # absent in pre-multires snapshots: default to empty (tolerant)
+        m.shape_batches = {k: list(v)
+                           for k, v in d.get("shape_batches", {}).items()}
+        m.state_bytes_by_shape = dict(d.get("state_bytes_by_shape", {}))
         return m
 
     @classmethod
@@ -379,6 +422,15 @@ class ServeMetrics:
                 g[2] += v[2]
                 g[3] += v[3]
                 g[4].extend(v[4])
+            for k, v in d.get("shape_batches", {}).items():
+                s = merged.shape_batches.setdefault(k, [0, 0, 0.0])
+                s[0] += v[0]
+                s[1] += v[1]
+                s[2] += v[2]
+            for k, v in d.get("state_bytes_by_shape", {}).items():
+                # replicas of one deployment report the same figure
+                merged.state_bytes_by_shape[k] = max(
+                    merged.state_bytes_by_shape.get(k, 0), int(v))
         return merged
 
 

@@ -35,6 +35,15 @@ the full group with the earliest-submitted member.  Within the chosen
 group the batch is the lapsed members plus the FIFO prefix, in stable
 FIFO order — exactly the ungrouped rule applied to the group.
 
+Multi-resolution serving folds a canonical **shape key** —
+``(latent_shape, crf_shape)`` — into the cut key *unconditionally*:
+mixed-shape lanes cannot share one executable, so every cut is
+shape-pure in any mode, and under grouping the cut key is
+(shape, compatibility group).  ``submit`` validates each request's
+declared shape against the deployment's shape ladder and raises
+``ShapeMismatchError`` at the API boundary instead of failing deep
+inside the jitted executable.
+
 The queue is guarded by a condition variable (``cv``): ``submit`` /
 ``form_batch`` / ``ready`` are safe to call from any thread, submitters
 wake anyone waiting on ``cv``, and ``seconds_until_ready`` tells a
@@ -46,9 +55,79 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, NamedTuple, Optional
+from typing import List, NamedTuple, Optional, Tuple
 
 from repro.analysis.runtime import make_condition
+
+
+class ShapeMismatchError(ValueError):
+    """The request's ``(latent_shape, crf_shape)`` (or its
+    ``init_latents``) does not match the deployment's declared shape
+    ladder.  Raised at the API boundary (``Scheduler.submit`` /
+    ``FleetRouter.submit``) instead of failing deep inside the jitted
+    executable — or worse, silently minting a new compiled signature."""
+
+
+# canonical shape key: ((H, W, C) latent shape, (S, D) per-sample CRF
+# shape) — the shape half of a (batch-bucket, shape-bucket) signature
+ShapeKey = Tuple[Tuple[int, ...], Tuple[int, ...]]
+
+
+def resolve_shape_key(latent_shape, crf_shape,
+                      default_shape: Optional[ShapeKey],
+                      allowed_shapes=None) -> Optional[ShapeKey]:
+    """Canonicalize a request's (possibly partial) shape declaration.
+
+    Both fields ``None`` -> the deployment default.  One field given ->
+    completed from the unique ladder entry matching it (so a client may
+    declare just the latent size), falling back to the default's other
+    half.  Returns ``None`` only when no default is known (a bare
+    scheduler outside any engine).
+    """
+    if latent_shape is None and crf_shape is None:
+        return default_shape
+    lat = tuple(latent_shape) if latent_shape is not None else None
+    crf = tuple(crf_shape) if crf_shape is not None else None
+    if (lat is None or crf is None) and allowed_shapes:
+        matches = [s for s in allowed_shapes
+                   if (lat is None or s[0] == lat)
+                   and (crf is None or s[1] == crf)]
+        if len(matches) == 1:
+            return matches[0]
+    if lat is None or crf is None:
+        d = default_shape if default_shape is not None else (None, None)
+        lat = lat if lat is not None else d[0]
+        crf = crf if crf is not None else d[1]
+    return (lat, crf)
+
+
+def validate_request_shape(req, default_shape: Optional[ShapeKey],
+                           allowed_shapes=None) -> Optional[ShapeKey]:
+    """Resolve ``req``'s shape key and fail fast on a mismatch.
+
+    Raises :class:`ShapeMismatchError` when the resolved key is outside
+    the declared ladder, or when ``init_latents`` disagrees with the
+    resolved latent shape (previously an opaque trace/broadcast error
+    deep inside the donated-buffer executable).  Returns the resolved
+    key (``None`` when nothing is declared — no validation possible).
+    """
+    shape = resolve_shape_key(req.latent_shape, req.crf_shape,
+                              default_shape, allowed_shapes)
+    if shape is None or shape[0] is None or shape[1] is None:
+        return shape
+    if allowed_shapes is not None and shape not in allowed_shapes:
+        ladder = sorted(allowed_shapes)
+        raise ShapeMismatchError(
+            f"request {req.request_id}: shape {shape} is not in the "
+            f"declared shape ladder {ladder}; declare it at engine "
+            "construction (shapes=[...]) or warmup(shapes=[...])")
+    if req.init_latents is not None:
+        ref_shape = getattr(req.init_latents, "shape", None)
+        if ref_shape is not None and tuple(ref_shape) != shape[0]:
+            raise ShapeMismatchError(
+                f"request {req.request_id}: init_latents shape "
+                f"{tuple(ref_shape)} != declared latent shape {shape[0]}")
+    return shape
 
 
 @dataclasses.dataclass
@@ -76,6 +155,13 @@ class DiffusionRequest:
     # ``Policy.with_budget``).  None -> the policy's own default
     # behaviour, bit-identical to serving without the SLO field.
     max_error: Optional[float] = None
+    # multi-resolution serving: this request's latent [H, W, C] and
+    # per-sample CRF [S, D] shapes.  None -> the engine's defaults.
+    # Validated against the declared shape ladder at submit time
+    # (ShapeMismatchError on mismatch); batches are always cut
+    # shape-pure, so the (batch-bucket, shape) signature is warmed.
+    latent_shape: Optional[Tuple[int, ...]] = None
+    crf_shape: Optional[Tuple[int, ...]] = None
     # open-loop stream plans: seconds after stream start at which this
     # request should be submitted (0.0 for closed-loop clients)
     arrival_s: float = 0.0
@@ -96,6 +182,19 @@ class BatchPlan(NamedTuple):
     # the request policy specialized to its effective_max_error tier);
     # None entries fall back to the engine default in lane_policies
     policies: Optional[List[object]] = None
+    # shape half of the (batch-bucket, shape-bucket) signature: every
+    # cut is shape-pure, so one pair covers the whole batch.  None ->
+    # the engine's default shapes (single-shape deployments).
+    latent_shape: Optional[Tuple[int, ...]] = None
+    crf_shape: Optional[Tuple[int, ...]] = None
+
+    @property
+    def signature(self) -> tuple:
+        """(batch-bucket, shape-bucket) — the compiled-executable key
+        this plan will run under (shape ``None`` = engine default)."""
+        shape = (None if self.latent_shape is None and self.crf_shape is
+                 None else (self.latent_shape, self.crf_shape))
+        return (self.bucket, shape)
 
     @property
     def n_real(self) -> int:
@@ -136,15 +235,31 @@ def bucket_sizes(max_batch: int) -> List[int]:
 
 
 def bucket_for(n: int, max_batch: int) -> int:
-    """Smallest bucket signature that fits ``n`` requests."""
+    """Smallest ladder signature that fits ``n`` requests.
+
+    The ladder is ``bucket_sizes(max_batch)``: every power of two below
+    ``max_batch`` plus ``max_batch`` itself.  With a non-power-of-two
+    ``max_batch`` a cut sized between the largest power of two and
+    ``max_batch`` therefore pads straight to ``max_batch`` (e.g. n=5,
+    max_batch=6 -> 6; n=5, max_batch=7 -> 7) — intermediate sizes are
+    deliberately NOT signatures, so the executable count stays
+    O(log max_batch).  The ladder always ends at ``max_batch >= n``
+    (checked above), so the scan below always yields.
+    """
     if n < 1:
         raise ValueError(f"need at least one request, got {n}")
     if n > max_batch:
         raise ValueError(f"{n} requests exceed max_batch={max_batch}")
-    for b in bucket_sizes(max_batch):
-        if b >= n:
-            return b
-    return max_batch
+    return next(b for b in bucket_sizes(max_batch) if b >= n)
+
+
+def bucket_signature(n: int, max_batch: int,
+                     shape: Optional[ShapeKey] = None) -> tuple:
+    """The (batch-bucket, shape-bucket) signature for ``n`` requests of
+    one shape — the key the engine's compiled-executable cache is
+    bounded by (``shapes x groups x buckets``).  ``shape=None`` is the
+    single-shape deployment (engine default)."""
+    return (bucket_for(n, max_batch), shape)
 
 
 class Scheduler:
@@ -162,13 +277,26 @@ class Scheduler:
                  pad_to_max: bool = False, clock=time.monotonic,
                  group_policies: bool = False, default_policy=None,
                  shed_depth: Optional[int] = None,
-                 shed_factor: float = 4.0):
+                 shed_factor: float = 4.0,
+                 default_shape: Optional[ShapeKey] = None,
+                 allowed_shapes: Optional[set] = None):
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
         self.pad_to_max = pad_to_max  # seed-compatible fixed signature
         self.clock = clock
         self.group_policies = group_policies
         self.default_policy = default_policy
+        # multi-resolution serving: the engine's default
+        # (latent_shape, crf_shape) pair and the declared shape ladder
+        # submits are validated against.  ``allowed_shapes`` is held by
+        # reference (the engine shares its own set), so shapes declared
+        # after construction — warmup(shapes=[...]) — are honoured.
+        # None/None = a bare scheduler: shape validation is skipped and
+        # every request files under one pseudo-shape.
+        self.default_shape = default_shape
+        self.allowed_shapes = (allowed_shapes if allowed_shapes is not None
+                               else ({default_shape} if default_shape
+                                     is not None else None))
         # load shedding: when the queue holds >= shed_depth requests at
         # submit time, the incoming request's effective error budget is
         # relaxed by shed_factor (snapped to a looser tier) — quality is
@@ -192,9 +320,26 @@ class Scheduler:
     def depth(self) -> int:
         return len(self)
 
+    def validate(self, req: DiffusionRequest) -> Optional[ShapeKey]:
+        """Resolve + validate the request's shape against the declared
+        ladder (see :func:`validate_request_shape`); raises
+        :class:`ShapeMismatchError` without touching the queue."""
+        return validate_request_shape(req, self.default_shape,
+                                      self.allowed_shapes)
+
+    def shape_of(self, req: DiffusionRequest) -> Optional[ShapeKey]:
+        """Canonical shape key this request files under (no validation
+        — submit already did that)."""
+        return resolve_shape_key(req.latent_shape, req.crf_shape,
+                                 self.default_shape, self.allowed_shapes)
+
     def submit(self, req: DiffusionRequest,
                now: Optional[float] = None) -> None:
         with self.cv:
+            # fail fast BEFORE any queue/counter mutation: a rejected
+            # request leaves no trace (submitted stays in step with the
+            # serve path)
+            self.validate(req)
             req.submit_time = self.clock() if now is None else now
             req.effective_max_error = req.max_error
             if (req.max_error is not None and self.shed_depth is not None
@@ -245,22 +390,34 @@ class Scheduler:
             key = self._key_cache[pol] = registry.compatibility_key(pol)
         return key
 
+    def _cut_key(self, req: DiffusionRequest) -> tuple:
+        """(shape key, compatibility key) a cut must be pure in.
+
+        The shape half ALWAYS folds in — mixed-shape lanes cannot share
+        one executable (``jnp.stack`` would fail outright), so shape
+        purity is a physical requirement of every former, grouped or
+        not.  The policy half folds in only under ``group_policies``
+        (the PR-5 ``compatibility_key()`` path).  A single-shape
+        ungrouped deployment collapses to one constant key — the
+        original whole-queue FIFO former, bit-identical.
+        """
+        return (self.shape_of(req),
+                self.group_key(req) if self.group_policies else None)
+
     def groups(self) -> dict:
-        """Queued request count per compatibility group (one pseudo-group
-        of the whole queue when grouping is off)."""
+        """Queued request count per (shape, compatibility-group) cut key
+        (one pseudo-group of the whole queue for a bare single-shape
+        ungrouped scheduler)."""
         with self.cv:
-            if not self.group_policies:
-                return {None: len(self.queue)} if self.queue else {}
             counts: dict = {}
             for r in self.queue:
-                k = self.group_key(r)
+                k = self._cut_key(r)
                 counts[k] = counts.get(k, 0) + 1
             return counts
 
     def _full_group(self) -> bool:
-        """Can some (group-pure) cut fill the largest bucket right now?"""
-        if not self.group_policies:
-            return len(self.queue) >= self.max_batch
+        """Can some (shape- and group-pure) cut fill the largest bucket
+        right now?"""
         return any(n >= self.max_batch for n in self.groups().values())
 
     def ready(self, now: Optional[float] = None) -> bool:
@@ -304,8 +461,12 @@ class Scheduler:
             return max(until, 0.0)
 
     def _cut_group(self, now: float, flush: bool):
-        """(key, member queue-indices in FIFO order) of the next cut."""
-        keys = [self.group_key(r) for r in self.queue]
+        """(key, member queue-indices in FIFO order) of the next cut.
+
+        Keys are ``_cut_key`` values — (shape, compatibility group) —
+        so every cut is shape-pure in any mode and policy-pure under
+        grouping."""
+        keys = [self._cut_key(r) for r in self.queue]
         lapsed = self._lapsed(now)
         if lapsed:
             # a lapsed deadline wins: the most-overdue request's group
@@ -348,10 +509,12 @@ class Scheduler:
             now = self.clock() if now is None else now
             if not self.queue or not (flush or self.ready(now)):
                 return None
-            if self.group_policies:
-                key, members = self._cut_group(now, flush)
-            else:
-                key, members = None, range(len(self.queue))
+            # every cut goes through the group machinery: the key is
+            # (shape, policy-group-or-None), so cuts are shape-pure in
+            # ANY mode (mixed shapes can't share an executable) and a
+            # single-shape ungrouped queue degenerates to one constant
+            # key — the whole-queue FIFO former, unchanged
+            (shape, gkey), members = self._cut_group(now, flush)
             lapsed_set = set(self._lapsed(now))
             take = min(len(members), self.max_batch)
             picked = [i for i in members if i in lapsed_set][:take]
@@ -370,9 +533,11 @@ class Scheduler:
             bucket = (self.max_batch if self.pad_to_max
                       else bucket_for(take, self.max_batch))
             return BatchPlan(requests=reqs, bucket=bucket, formed_at=now,
-                             group_key=key,
+                             group_key=gkey,
                              policies=[self.effective_policy(r)
-                                       for r in reqs])
+                                       for r in reqs],
+                             latent_shape=(shape[0] if shape else None),
+                             crf_shape=(shape[1] if shape else None))
 
     def _canonical_lane_order(self, reqs: List[DiffusionRequest]
                               ) -> List[DiffusionRequest]:

@@ -315,8 +315,14 @@ class _FakeServeEngine:
     max_batch = MAX_BATCH
     buckets = [1, 2, 4]
     scheduler = _FakeScheduler()
+    # shape metadata the worker reports in its ready handshake (a real
+    # engine's ladder always includes its default shape)
+    shapes = [((8, 8, 4), (16, 64))]
+    latent_shape = (8, 8, 4)
+    crf_shape = (16, 64)
 
-    def warmup(self, buckets=None, lane_policy_sets=(), policies=()):
+    def warmup(self, buckets=None, lane_policy_sets=(), policies=(),
+               shapes=()):
         return 0.0
 
     def metrics_dict(self):

@@ -19,6 +19,12 @@ on the full cut history:
 * **policy purity** — under ``group_policies=True`` every emitted
   batch is policy-homogeneous (one compatibility key), and the plan's
   ``group_key`` matches its members;
+* **shape purity** — in EVERY mode (mixed shapes cannot share one
+  executable) each cut resolves to a single (latent, CRF) shape key,
+  the plan carries it, and deadline promotion never leaks across
+  shapes: the promoted set is the lapsed members of the cut's own
+  (shape, group), so a lapsed 512-token request can never be pulled
+  into a 256-token batch;
 * **bucketing** — ``bucket`` is a ladder signature that fits
   ``n_real`` (exactly ``bucket_for`` unless ``pad_to_max``).
 
@@ -55,6 +61,14 @@ POLICIES = [
     CachePolicy(kind="freqca_a", tea_threshold=0.3, rho=0.25),
     CachePolicy(kind="teacache", tea_threshold=0.2),
 ]
+# multi-resolution streams: (latent, CRF) shape pairs a request may
+# declare; None = undeclared (the engine-default pseudo-shape)
+SHAPES = [
+    None,
+    ((8, 8, 4), (16, 64)),
+    ((16, 16, 4), (64, 64)),
+    ((32, 32, 4), (256, 64)),
+]
 
 
 @dataclasses.dataclass
@@ -69,7 +83,8 @@ def drive(actions, max_batch, max_wait_s, grouped, pad_to_max=False):
     """Replay a generated action stream; return (submitted, cuts, sched).
 
     ``actions``: sequence of ("submit", gap_s, policy_idx, deadline_s)
-    and ("cut", gap_s) tuples, on a fake monotonically advancing clock;
+    — optionally with a trailing shape index into ``SHAPES`` — and
+    ("cut", gap_s) tuples, on a fake monotonically advancing clock;
     the stream always ends with a flush drain (every queue empties).
     """
     t = [0.0]
@@ -90,9 +105,12 @@ def drive(actions, max_batch, max_wait_s, grouped, pad_to_max=False):
     for act in actions:
         t[0] += act[1]
         if act[0] == "submit":
+            shape = SHAPES[act[4]] if len(act) > 4 else None
             req = DiffusionRequest(request_id=rid, seed=rid,
                                    policy=POLICIES[act[2]],
-                                   deadline_s=act[3])
+                                   deadline_s=act[3],
+                                   latent_shape=shape and shape[0],
+                                   crf_shape=shape and shape[1])
             sched.submit(req)
             submitted.append(req)
             rid += 1
@@ -106,18 +124,32 @@ def drive(actions, max_batch, max_wait_s, grouped, pad_to_max=False):
     return submitted, cuts, sched
 
 
+def _plan_cut_key(plan, grouped):
+    """The (shape, group) cut key a plan claims for itself."""
+    shape = (None if plan.latent_shape is None
+             else (tuple(plan.latent_shape), tuple(plan.crf_shape)))
+    return (shape, plan.group_key if grouped else None)
+
+
 def check_invariants(submitted, cuts, sched, max_batch, grouped,
                      pad_to_max=False):
     by_id = {r.request_id: r for r in submitted}
-    key_of = {r.request_id: sched.group_key(r) for r in submitted}
+    # the scheduler's own (shape, group) cut key: purity, promotion,
+    # and FIFO are all scoped to it (shape folds in unconditionally)
+    key_of = {r.request_id: sched._cut_key(r) for r in submitted}
 
     # conservation: every submitted request served exactly once
     served = [r.request_id for c in cuts for r in c.plan.requests]
     assert sorted(served) == sorted(by_id), "dropped/duplicated requests"
 
-    fifo_tail: dict = {}   # group key -> last non-promoted rid served
+    fifo_tail: dict = {}   # cut key -> last non-promoted rid served
     for c in cuts:
         ids = [r.request_id for r in c.plan.requests]
+        plan_key = _plan_cut_key(c.plan, grouped)
+        # shape purity in EVERY mode: one shape key per cut, and the
+        # plan carries it
+        assert {key_of[i] for i in ids} == {plan_key}, \
+            f"impure cut {ids}: {[key_of[i] for i in ids]} != {plan_key}"
         if grouped:
             # canonical lane order: policy values in sorted blocks so
             # the jit signature keys on the composition, stable
@@ -140,42 +172,40 @@ def check_invariants(submitted, cuts, sched, max_batch, grouped,
 
         if grouped:
             # policy purity: one compatibility group per batch
-            keys = {key_of[i] for i in ids}
+            keys = {sched.group_key(by_id[i]) for i in ids}
             assert keys == {c.plan.group_key}, \
                 f"mixed-policy batch under grouping: {keys}"
 
         # deadline promotion: a cut taken while lapsed requests exist
-        # comes from the most-overdue request's group and contains its
-        # lapsed members up to max_batch
+        # comes from the most-overdue request's (shape, group) and
+        # contains ITS lapsed members up to max_batch — promotion never
+        # leaks a lapsed request into a cut of another shape or group
         if c.lapsed_before:
             now = c.plan.formed_at
             overdue = {i: now - by_id[i].submit_time - by_id[i].deadline_s
                        for i in c.lapsed_before}
             worst = max(overdue.values())
-            if grouped:
-                worst_keys = {key_of[i] for i, v in overdue.items()
-                              if v == worst}
-                assert c.plan.group_key in worst_keys
-                in_group = [i for i in c.lapsed_before
-                            if key_of[i] == c.plan.group_key]
-            else:
-                in_group = list(c.lapsed_before)
+            worst_keys = {key_of[i] for i, v in overdue.items()
+                          if v == worst}
+            assert plan_key in worst_keys, \
+                f"cut {plan_key} ignored most-overdue {worst_keys}"
+            in_group = [i for i in c.lapsed_before
+                        if key_of[i] == plan_key]
             expect = in_group[:min(len(in_group), max_batch)]
             assert set(expect) <= set(ids), \
                 f"lapsed {expect} missing from the next cut {ids}"
 
-        # stable FIFO within a group ACROSS cuts: a non-promoted request
-        # is never served in a later cut than a younger one of its own
-        # group (promoted = lapsed at its cut time; lanes inside one
-        # cut run simultaneously, so canonical lane order is exempt)
+        # stable FIFO within a (shape, group) ACROSS cuts: a
+        # non-promoted request is never served in a later cut than a
+        # younger one of its own cut key (promoted = lapsed at its cut
+        # time; lanes inside one cut run simultaneously, so canonical
+        # lane order is exempt)
         non_promoted = [i for i in ids if i not in c.lapsed_before]
         for i in non_promoted:
-            k = key_of[i] if grouped else None
-            assert fifo_tail.get(k, -1) < i, \
-                f"request {i} overtook FIFO order in group {k}"
+            assert fifo_tail.get(plan_key, -1) < i, \
+                f"request {i} overtook FIFO order in {plan_key}"
         for i in non_promoted:
-            k = key_of[i] if grouped else None
-            fifo_tail[k] = max(fifo_tail.get(k, -1), i)
+            fifo_tail[plan_key] = max(fifo_tail.get(plan_key, -1), i)
 
 
 def run_case(actions, max_batch, max_wait_s, grouped, pad_to_max=False):
@@ -196,8 +226,11 @@ def _actions():
     deadline = st.one_of(st.none(),
                          st.floats(min_value=0.0, max_value=0.5,
                                    allow_nan=False, allow_infinity=False))
+    # every submit carries a shape index too (0 = undeclared), so the
+    # whole property suite runs over (batch, seq)-mixed streams
     submit = st.tuples(st.just("submit"), gap,
-                       st.integers(0, len(POLICIES) - 1), deadline)
+                       st.integers(0, len(POLICIES) - 1), deadline,
+                       st.integers(0, len(SHAPES) - 1))
     cut = st.tuples(st.just("cut"), gap)
     return st.lists(st.one_of(submit, cut), min_size=1, max_size=48)
 
@@ -292,3 +325,84 @@ def test_deterministic_static_families_share_batches():
     assert len(cuts) == 2
     assert [r.request_id for r in cuts[0].plan.requests] == [0, 1]
     assert [r.request_id for r in cuts[1].plan.requests] == [2, 3]
+
+
+# ---------------------------------------------------------------------------
+# multi-resolution deterministic twins
+# ---------------------------------------------------------------------------
+
+def _multishape_stream_actions():
+    """Shapes and policies both cycling, deadlines sprinkled in — the
+    mixed-resolution production stream in miniature."""
+    acts = []
+    for i in range(20):
+        acts.append(("submit", 0.01, i % len(POLICIES),
+                     0.2 if i % 5 == 4 else None, i % len(SHAPES)))
+        if i % 3 == 2:
+            acts.append(("cut", 0.05))
+    acts.append(("cut", 1.0))
+    return acts
+
+
+@pytest.mark.parametrize("grouped", [False, True])
+@pytest.mark.parametrize("max_batch", [1, 3, 4])
+def test_deterministic_multishape_stream(grouped, max_batch):
+    """Full invariant set — shape purity included — over a stream that
+    mixes four shapes with seven policies, in BOTH formation modes
+    (shape purity is unconditional, not a grouping feature)."""
+    run_case(_multishape_stream_actions(), max_batch, max_wait_s=0.05,
+             grouped=grouped)
+
+
+@pytest.mark.parametrize("grouped", [False, True])
+def test_deterministic_shape_purity_same_policy(grouped):
+    """Identical policies at two shapes never share a cut: the shape
+    key alone forces separate batches."""
+    acts = [("submit", 0.0, 2, None, 1), ("submit", 0.0, 2, None, 2),
+            ("submit", 0.0, 2, None, 1), ("cut", 0.2)]
+    submitted, cuts = run_case(acts, 8, max_wait_s=0.05, grouped=grouped)
+    assert len(cuts) == 2
+    assert [r.request_id for r in cuts[0].plan.requests] == [0, 2]
+    assert [r.request_id for r in cuts[1].plan.requests] == [1]
+    assert cuts[0].plan.latent_shape == SHAPES[1][0]
+    assert cuts[1].plan.latent_shape == SHAPES[2][0]
+
+
+def test_deterministic_no_cross_shape_promotion():
+    """A lapsed small-shape request is promoted into its own shape's
+    next cut — never pulled into the large-shape batch that triggers
+    first, and never starved behind it."""
+    # same policy everywhere: only the shape key separates the lanes
+    acts = [("submit", 0.0, 2, None, 2)] * 0
+    acts = [("submit", 0.0, 2, 0.05, 1),    # small shape, tight deadline
+            ("submit", 0.0, 2, None, 2),
+            ("submit", 0.0, 2, None, 2),
+            ("cut", 0.2),                   # deadline lapsed -> shape 1
+            ("cut", 0.0)]                   # then the shape-2 backlog
+    submitted, cuts = run_case(acts, 8, max_wait_s=1e9, grouped=True)
+    assert [r.request_id for r in cuts[0].plan.requests] == [0]
+    assert cuts[0].plan.latent_shape == SHAPES[1][0]
+    assert [r.request_id for r in cuts[1].plan.requests] == [1, 2]
+    assert cuts[1].plan.latent_shape == SHAPES[2][0]
+
+
+def test_deterministic_partial_shape_declaration():
+    """A request declaring only its latent shape resolves to the unique
+    ladder entry matching it (scheduler built with a ladder), and cuts
+    stay shape-pure."""
+    from repro.serving.scheduler import Scheduler as S
+    ladder = {SHAPES[1], SHAPES[2]}
+    sched = S(max_batch=4, max_wait_s=0.0, clock=lambda: 0.0,
+              default_shape=SHAPES[1], allowed_shapes=set(ladder))
+    sched.submit(DiffusionRequest(request_id=0, seed=0,
+                                  latent_shape=SHAPES[2][0]), now=0.0)
+    sched.submit(DiffusionRequest(request_id=1, seed=1), now=0.0)
+    plan = sched.form_batch(now=1.0)
+    # the partially-declared request completed to the full SHAPES[2]
+    # pair and therefore cannot share the default-shape cut
+    assert [r.request_id for r in plan.requests] == [0]
+    assert plan.latent_shape == SHAPES[2][0]
+    assert plan.crf_shape == SHAPES[2][1]
+    plan2 = sched.form_batch(now=1.0)
+    assert [r.request_id for r in plan2.requests] == [1]
+    assert plan2.latent_shape == SHAPES[1][0]
